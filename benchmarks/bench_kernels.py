@@ -1,0 +1,64 @@
+"""Beyond-paper: Pallas kernel parity + interpret-mode call costs.
+
+CPU interpret-mode wall times are NOT TPU performance; the derived column is
+the oracle parity (the roofline tables in EXPERIMENTS.md carry the perf story).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operator_model import error_tables, spec_for
+from repro.kernels import axo_matmul, flash_attention, ssd_scan
+from repro.kernels.ref import (
+    ref_axo_matmul_lowrank,
+    ref_flash_attention,
+    ref_ssd_scan,
+)
+
+from .common import BenchCtx, row, timed
+
+RNG = np.random.default_rng(0)
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    rows = []
+
+    # axo_matmul
+    spec = spec_for(8)
+    cfg = RNG.integers(0, 2, spec.n_luts).astype(np.uint8)
+    err = error_tables(spec, cfg[None])[0].astype(np.float64)
+    u, s, vt = np.linalg.svd(err)
+    r_ = 4
+    f = jnp.asarray((u[:, :r_] * s[:r_]).astype(np.float32))
+    g = jnp.asarray(vt[:r_].T.astype(np.float32))
+    sv = jnp.asarray(spec.operand_values, jnp.float32)
+    a = jnp.asarray(RNG.integers(0, 256, (256, 256)))
+    b = jnp.asarray(RNG.integers(0, 256, (256, 256)))
+    out, us = timed(lambda: axo_matmul(a, b, f, g, sv).block_until_ready())
+    ref = ref_axo_matmul_lowrank(a, b, f, g, sv)
+    errv = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    rows.append(row("kernels.axo_matmul_256_r4", us, f"rel_err={errv:.2e}"))
+
+    # flash attention
+    q = jnp.asarray(RNG.standard_normal((2, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 512, 64)), jnp.float32)
+    out, us = timed(lambda: flash_attention(q, k, v, causal=True).block_until_ready())
+    ref = ref_flash_attention(q, k, v, causal=True)
+    errv = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(row("kernels.flash_gqa_512", us, f"abs_err={errv:.2e}"))
+
+    # ssd scan
+    x = jnp.asarray(RNG.standard_normal((2, 512, 8, 16)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (2, 512, 8)), jnp.float32)
+    av = jnp.asarray(-RNG.uniform(0.5, 2.0, (8,)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((2, 512, 1, 32)), jnp.float32)
+    cm = jnp.asarray(RNG.standard_normal((2, 512, 1, 32)), jnp.float32)
+    (y, hf), us = timed(lambda: tuple(
+        t.block_until_ready() for t in ssd_scan(x, dt, av, bm, cm, chunk=128)))
+    yr, hr = ref_ssd_scan(x, dt, av, bm, cm)
+    errv = float(jnp.max(jnp.abs(y - yr)))
+    rows.append(row("kernels.ssd_scan_512", us, f"abs_err={errv:.2e}"))
+    return rows

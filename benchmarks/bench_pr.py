@@ -1,0 +1,45 @@
+"""Paper Figs. 2/10: polynomial-regression R^2 / MAE progression as
+correlation-ranked quadratic terms are added (vs reverse-ranked)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.correlation import rank_quadratic_terms
+from repro.core.regression import fit_poly, mae, r2_score
+
+from .common import BenchCtx, row, timed
+
+
+def _split(n, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    cut = int(0.8 * n)
+    return idx[:cut], idx[cut:]
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    ds = ctx.ds8()
+    X = ds.configs.astype(np.float64)
+    tr, te = _split(len(X), ctx.seed)
+    rows = []
+    grid = (0, 4, 16, 64) if ctx.quick else (0, 4, 16, 64, 128, 256, 630)
+    for metric, tag in (("PDPLUT", "ppa"), ("AVG_ABS_REL_ERR", "behav")):
+        y = ds.metrics[metric]
+        ranked = rank_quadratic_terms(X[tr], y[tr])
+        for n_quad in grid:
+            model, us = timed(fit_poly, X[tr], y[tr], ranked[:n_quad])
+            r2_tr = r2_score(y[tr], model.predict(X[tr]))
+            r2_te = r2_score(y[te], model.predict(X[te]))
+            mae_te = mae(y[te], model.predict(X[te]))
+            rows.append(row(
+                f"pr.fig10_{tag}_q{n_quad}", us,
+                f"r2_train={r2_tr:.4f} r2_test={r2_te:.4f} mae_test={mae_te:.4g}",
+            ))
+        # Fig. 2's ordering claim: ranked terms beat reverse-ranked
+        k = 16
+        fwd = r2_score(y[tr], fit_poly(X[tr], y[tr], ranked[:k]).predict(X[tr]))
+        rev = r2_score(y[tr], fit_poly(X[tr], y[tr], ranked[::-1][:k]).predict(X[tr]))
+        rows.append(row(f"pr.fig2_rank_order_gain_{tag}", 0.0,
+                        f"fwd={fwd:.4f} rev={rev:.4f} delta={fwd - rev:+.4f}"))
+    return rows

@@ -1,0 +1,69 @@
+"""Shared benchmark context: cached 8x8 characterization dataset, timers."""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.dataset import Dataset, build_training_dataset
+from repro.core.operator_model import OperatorSpec, spec_for
+
+CACHE_DIR = os.environ.get("REPRO_CACHE", "experiments/cache")
+
+
+@dataclass
+class BenchCtx:
+    quick: bool = True
+    seed: int = 0
+    _ds8: Dataset | None = field(default=None, repr=False)
+    _ds4: Dataset | None = field(default=None, repr=False)
+
+    @property
+    def spec8(self) -> OperatorSpec:
+        return spec_for(8)
+
+    @property
+    def spec4(self) -> OperatorSpec:
+        return spec_for(4)
+
+    def ds8(self) -> Dataset:
+        """The paper's signed 8x8 training dataset (RANDOM + PATTERN), cached."""
+        if self._ds8 is None:
+            n = 1200 if self.quick else 4000
+            path = os.path.join(CACHE_DIR, f"ds8_{n}_{self.seed}.npz")
+            self._ds8 = build_training_dataset(
+                self.spec8, n_random=n, seed=self.seed, cache_path=path)
+        return self._ds8
+
+    def ds4(self) -> Dataset:
+        if self._ds4 is None:
+            path = os.path.join(CACHE_DIR, f"ds4_{self.seed}.npz")
+            self._ds4 = build_training_dataset(
+                self.spec4, n_random=400, seed=self.seed, cache_path=path)
+        return self._ds4
+
+    @property
+    def n_gen(self) -> int:
+        return 40 if self.quick else 250
+
+    @property
+    def const_sf_grid(self):
+        return (0.2, 0.5, 1.0) if self.quick else (0.2, 0.5, 0.8, 1.0, 1.2, 1.5)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived) -> dict:
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def emit(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}", flush=True)

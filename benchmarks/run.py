@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME[,NAME]]
+
+Output: ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
+Roofline/dry-run numbers live in experiments/dryrun (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from .common import BenchCtx, emit
+
+BENCHES = [
+    "dataset",        # Figs. 5/7/8
+    "correlation",    # Figs. 1/9
+    "pr",             # Figs. 2/10
+    "estimators",     # Table 3
+    "map",            # Fig. 11
+    "dse",            # Figs. 12/13
+    "sota",           # Figs. 14/15
+    "apps",           # Figs. 16-19
+    "kernels",        # beyond-paper kernel parity
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (250 GA generations, full grids)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    ctx = BenchCtx(quick=not args.full, seed=args.seed)
+    names = args.only.split(",") if args.only else BENCHES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name = f"benchmarks.bench_{name}"
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run(ctx)
+            emit(rows)
+            print(f"# bench_{name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception:
+            traceback.print_exc()
+            print(f"# bench_{name}: FAILED", flush=True)
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

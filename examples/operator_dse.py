@@ -1,0 +1,69 @@
+"""Operator-level DSE on the paper's signed 8x8 multiplier (paper §5.3/5.4).
+
+  PYTHONPATH=src python examples/operator_dse.py [--const-sf 0.5] [--gens 40]
+
+Compares GA-only (AppAxO-style), MaP-only, and MaP+GA (AxOMaP) and prints the
+validated Pareto fronts + hypervolumes, plus the EvoApprox-style frozen-library
+baseline under the same constraints.
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.dataset import BEHAV_KEY, PPA_KEY, build_training_dataset, characterize
+from repro.core.dse import (
+    DSESettings,
+    fixed_library,
+    hv_reference,
+    map_solution_pool,
+    run_dse,
+)
+from repro.core.moo import hypervolume_2d
+from repro.core.operator_model import spec_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--const-sf", type=float, default=0.5)
+    ap.add_argument("--gens", type=int, default=40)
+    ap.add_argument("--n-random", type=int, default=1200)
+    args = ap.parse_args()
+
+    spec = spec_for(8)
+    print(f"signed 8x8 multiplier: L={spec.n_luts} -> 2^36 designs")
+    ds = build_training_dataset(
+        spec, n_random=args.n_random, seed=0,
+        cache_path=f"experiments/cache/ds8_{args.n_random}_0.npz",
+    )
+    print(f"training dataset: {len(ds)} characterized configs")
+
+    st = DSESettings(const_sf=args.const_sf, pop_size=48, n_gen=args.gens,
+                     n_quad_grid=(0, 4, 16), pool_size=6, seed=0)
+    ref = hv_reference(ds, st)
+    pool = map_solution_pool(spec, ds, st)
+    print(f"MaP pool: {len(pool)} configs (const_sf={args.const_sf})")
+
+    results = {}
+    for method in ("ga", "map", "map+ga"):
+        r = run_dse(spec, ds, method, settings=st, map_pool=pool, ref=ref)
+        results[method] = r
+        print(f"{method:7s} hv_ppf={r.hv_ppf:.5g} hv_vpf={r.hv_vpf:.5g} "
+              f"front={len(r.vpf_objs)} evals={r.n_evals} ({r.wall_s:.1f}s)")
+
+    lib = fixed_library(spec)
+    objs = characterize(spec, lib).objectives()
+    max_b = args.const_sf * ds.metrics[BEHAV_KEY].max()
+    max_p = args.const_sf * ds.metrics[PPA_KEY].max()
+    feas = (objs[:, 0] <= max_b) & (objs[:, 1] <= max_p)
+    hv_lib = hypervolume_2d(objs[feas], ref) if feas.any() else 0.0
+    print(f"library hv_vpf={hv_lib:.5g} (feasible {int(feas.sum())}/{len(lib)})"
+          " <- EvoApprox-style frozen baseline")
+
+    ga, best = results["ga"], max(results["map"].hv_vpf, results["map+ga"].hv_vpf)
+    print(f"\nAxOMaP vs GA-only: {100*(best - ga.hv_vpf)/max(ga.hv_vpf,1e-9):+.1f}% "
+          f"validated hypervolume (paper reports up to +21% / +116% tight)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Application substrate for application-specific AxO DSE (paper Table 2).
+
+Each application evaluates one BEHAV metric for a batch of approximate-operator
+product tables; PPA always remains the operator's PDPLUT.  All datasets are
+deterministic procedural surrogates (no network access) with the same task
+structure as the paper's: 1-D conv ECG peak detection, GEMV digit classification,
+2-D conv Gaussian smoothing, and a beyond-paper transformer-FFN block.
+"""
+
+from .base import AxOApplication, quantize_int8, table_conv1d, table_conv2d, table_matmul
+from .ecg import ECGPeakDetection
+from .mnist import DigitClassification
+from .gauss import GaussianSmoothing
+from .ffn import TransformerFFN
+
+APPLICATIONS = {
+    "ecg": ECGPeakDetection,
+    "mnist": DigitClassification,
+    "gauss": GaussianSmoothing,
+    "ffn": TransformerFFN,
+}
+
+__all__ = [
+    "AxOApplication",
+    "APPLICATIONS",
+    "ECGPeakDetection",
+    "DigitClassification",
+    "GaussianSmoothing",
+    "TransformerFFN",
+    "quantize_int8",
+    "table_conv1d",
+    "table_conv2d",
+    "table_matmul",
+]

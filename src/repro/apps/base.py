@@ -1,0 +1,106 @@
+"""Shared machinery: int8 quantization + table-based approximate arithmetic.
+
+An approximate signed NxN multiplier is fully described by its product table
+``T[(a & mask), (b & mask)] -> int``; applications compute every multiply through
+that table, so swapping tables swaps operators.  The accurate table reproduces
+exact integer arithmetic (tested), so "accurate operator" baselines use the same
+code path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.dataset import Dataset, characterize
+from ..core.operator_model import OperatorSpec, accurate_config, product_tables
+
+__all__ = [
+    "quantize_int8",
+    "table_matmul",
+    "table_conv1d",
+    "table_conv2d",
+    "AxOApplication",
+]
+
+
+def quantize_int8(x: np.ndarray, n_bits: int = 8) -> tuple[np.ndarray, float]:
+    """Symmetric per-tensor quantization to signed ``n_bits`` codes.
+
+    Returns (codes, scale) with ``codes`` already masked to table-index space
+    (two's complement & (2^n - 1)) and ``x ~= scale * signed(codes)``.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    qmax = (1 << (n_bits - 1)) - 1
+    amax = float(np.abs(x).max())
+    scale = (amax / qmax) if amax > 0 else 1.0
+    q = np.clip(np.round(x / scale), -qmax - 1, qmax).astype(np.int64)
+    return (q & ((1 << n_bits) - 1)).astype(np.int64), scale
+
+
+def table_matmul(table: np.ndarray, a_codes: np.ndarray, b_codes: np.ndarray) -> np.ndarray:
+    """(M, K) x (K, N) -> (M, N) int64 via product-table lookups."""
+    # gather (M, K, N) then reduce K; fine for the app-scale GEMVs used here.
+    prod = table[a_codes[:, :, None], b_codes[None, :, :]].astype(np.int64)
+    return prod.sum(axis=1)
+
+
+def table_conv1d(table: np.ndarray, x_codes: np.ndarray, h_codes: np.ndarray) -> np.ndarray:
+    """Valid-mode 1-D convolution (correlation) through the product table."""
+    k = h_codes.shape[0]
+    win = np.lib.stride_tricks.sliding_window_view(x_codes, k)   # (T-k+1, k)
+    prod = table[win, h_codes[None, :]].astype(np.int64)
+    return prod.sum(axis=-1)
+
+
+def table_conv2d(table: np.ndarray, img_codes: np.ndarray, k_codes: np.ndarray) -> np.ndarray:
+    """Valid-mode 2-D convolution through the product table."""
+    kh, kw = k_codes.shape
+    win = np.lib.stride_tricks.sliding_window_view(img_codes, (kh, kw))  # (H', W', kh, kw)
+    prod = table[win, k_codes[None, None, :, :]].astype(np.int64)
+    return prod.sum(axis=(-1, -2))
+
+
+@dataclass
+class AxOApplication:
+    """Base: evaluate BEHAV for batches of configs / product tables."""
+
+    name: str = "base"
+
+    def behav_from_tables(self, tables: np.ndarray) -> np.ndarray:
+        """(D, 2^N, 2^N) int32 product tables -> (D,) BEHAV values (minimized)."""
+        raise NotImplementedError
+
+    # -- conveniences used by the DSE layer ---------------------------------
+
+    def behav_metric_name(self) -> str:
+        return f"APP_{self.name.upper()}"
+
+    def behav(self, spec: OperatorSpec, configs: np.ndarray, batch: int = 128) -> np.ndarray:
+        configs = np.atleast_2d(np.asarray(configs))
+        out = np.empty(len(configs), dtype=np.float64)
+        for lo in range(0, len(configs), batch):
+            hi = min(lo + batch, len(configs))
+            tables = product_tables(spec, configs[lo:hi])
+            out[lo:hi] = self.behav_from_tables(tables)
+        return out
+
+    def accurate_behav(self, spec: OperatorSpec) -> float:
+        return float(self.behav(spec, accurate_config(spec)[None])[0])
+
+    def characterized_dataset(self, spec: OperatorSpec, base: Dataset) -> Dataset:
+        """Attach this app's BEHAV metric to an existing characterized dataset."""
+        metrics = dict(base.metrics)
+        metrics[self.behav_metric_name()] = self.behav(spec, base.configs)
+        return Dataset(configs=base.configs, metrics=metrics, source=base.source)
+
+    def characterize_fn(self, spec: OperatorSpec, ppa_key: str = "PDPLUT"):
+        """(D, L) -> (D, 2) [app BEHAV, operator PPA] for dse.run_dse."""
+
+        def fn(configs: np.ndarray) -> np.ndarray:
+            ds = characterize(spec, configs)
+            b = self.behav(spec, configs)
+            return np.stack([b, ds.metrics[ppa_key]], axis=-1)
+
+        return fn

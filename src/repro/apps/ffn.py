@@ -1,0 +1,85 @@
+"""Beyond-paper application: a transformer FFN block on AxO arithmetic.
+
+The DSE target the paper never tried: both GEMMs of a GeLU FFN
+(``W2 @ gelu(W1 @ x)``) run through the approximate operator's product table.
+BEHAV = 100 x relative L2 error of the block output vs. the accurate-operator
+int8 pipeline.  This is the bridge to the framework's LM serving path: configs
+selected here are exactly what ``repro.axo`` deploys inside the LM architectures.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .base import AxOApplication, quantize_int8, table_matmul
+
+__all__ = ["TransformerFFN"]
+
+
+def _gelu(x: np.ndarray) -> np.ndarray:
+    return 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * x**3)))
+
+
+@dataclass
+class TransformerFFN(AxOApplication):
+    name: str = "ffn"
+    d_model: int = 64
+    d_ff: int = 128
+    n_tokens: int = 96
+    seed: int = 17
+
+    _x: np.ndarray = field(init=False, repr=False)
+    _w1: np.ndarray = field(init=False, repr=False)
+    _w2: np.ndarray = field(init=False, repr=False)
+    _x_codes: np.ndarray = field(init=False, repr=False)    # (T, D)
+    _w1_codes: np.ndarray = field(init=False, repr=False)   # (D, F)
+    _w2_codes: np.ndarray = field(init=False, repr=False)   # (F, D)
+    _sx: float = field(init=False, repr=False)
+    _s1: float = field(init=False, repr=False)
+    _s2: float = field(init=False, repr=False)
+    _ref_out: np.ndarray | None = field(init=False, repr=False, default=None)
+    _prep_bits: int = field(init=False, repr=False, default=0)
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        self._x = rng.standard_normal((self.n_tokens, self.d_model))
+        self._w1 = rng.standard_normal((self.d_model, self.d_ff)) / np.sqrt(self.d_model)
+        self._w2 = rng.standard_normal((self.d_ff, self.d_model)) / np.sqrt(self.d_ff)
+        self._prepare(8)
+
+    def _prepare(self, n_bits: int) -> None:
+        if self._prep_bits == n_bits:
+            return
+        self._x_codes, self._sx = quantize_int8(self._x, n_bits=n_bits)
+        self._w1_codes, self._s1 = quantize_int8(self._w1, n_bits=n_bits)
+        self._w2_codes, self._s2 = quantize_int8(self._w2, n_bits=n_bits)
+        self._ref_out = None
+        self._prep_bits = n_bits
+
+    def _forward(self, table: np.ndarray) -> np.ndarray:
+        n_bits = self._prep_bits
+        h = table_matmul(table, self._x_codes, self._w1_codes).astype(np.float64)
+        h = _gelu(h * (self._sx * self._s1))
+        h_codes, sh = quantize_int8(h, n_bits=n_bits)
+        y = table_matmul(table, h_codes, self._w2_codes).astype(np.float64)
+        return y * (sh * self._s2)
+
+    def behav_from_tables(self, tables: np.ndarray) -> np.ndarray:
+        tables = np.asarray(tables)
+        if tables.ndim == 2:
+            tables = tables[None]
+        self._prepare(int(tables.shape[-1]).bit_length() - 1)
+        if self._ref_out is None:
+            n = tables.shape[-1]
+            u = np.arange(n)
+            v = np.where(u >= n // 2, u - n, u)
+            exact = np.multiply.outer(v, v).astype(np.int64)
+            self._ref_out = self._forward(exact)
+        ref = self._ref_out
+        denom = float(np.linalg.norm(ref)) or 1.0
+        out = np.empty(len(tables), dtype=np.float64)
+        for d, tab in enumerate(tables):
+            out[d] = 100.0 * float(np.linalg.norm(self._forward(tab) - ref)) / denom
+        return out

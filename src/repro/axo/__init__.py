@@ -1,0 +1,3 @@
+from .deploy import AxOOperator, axo_linear, quantize_tensor
+
+__all__ = ["AxOOperator", "axo_linear", "quantize_tensor"]

@@ -1,0 +1,116 @@
+"""AxO deployment: run LM linear layers on a DSE-selected approximate operator.
+
+The bridge from the paper's DSE output (a LUT config) to the framework's
+serving path:
+
+  1. ``AxOOperator.from_config``: behavioral-model product table -> error table
+     ``E = T - ab`` -> rank-R SVD factors ``(f, g)`` + the signed-value table.
+     R is a quality knob characterized with the same BEHAV metrics as the
+     operator itself (``rank_behav``).
+  2. ``axo_linear``: per-tensor symmetric int8 quantization of activations and
+     weights, then the AxO matmul -- the Pallas kernel on TPU, its jnp
+     reference (identical math) otherwise -- and dequantization.
+
+The bit-exact table path (exhaustive gather) stays available for validation;
+production uses the rank-R MXU path (DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.operator_model import (
+    OperatorSpec,
+    error_tables,
+    exact_product_table,
+    product_tables,
+    spec_for,
+)
+from ..kernels.ops import axo_matmul
+from ..kernels.ref import ref_axo_matmul_lowrank
+
+__all__ = ["AxOOperator", "quantize_tensor", "axo_linear"]
+
+
+@dataclass(frozen=True)
+class AxOOperator:
+    """A deployable approximate multiplier: rank-R factorized error tables."""
+
+    n_bits: int
+    rank: int
+    f_table: np.ndarray          # (2^n, R) float32
+    g_table: np.ndarray          # (2^n, R) float32
+    signed_vals: np.ndarray      # (2^n,) int32
+    table: np.ndarray            # (2^n, 2^n) int32 exact approximate products
+
+    @staticmethod
+    def from_config(config: np.ndarray, rank: int = 8, n_bits: int = 8) -> "AxOOperator":
+        spec = spec_for(n_bits)
+        table = product_tables(spec, np.asarray(config)[None])[0]
+        err = error_tables(spec, np.asarray(config)[None])[0].astype(np.float64)
+        u, s, vt = np.linalg.svd(err)
+        r = min(rank, len(s))
+        f = (u[:, :r] * s[:r]).astype(np.float32)
+        g = vt[:r].T.astype(np.float32)
+        return AxOOperator(
+            n_bits=n_bits, rank=r, f_table=f, g_table=g,
+            signed_vals=spec.operand_values.astype(np.int32), table=table,
+        )
+
+    # -- quality of the rank knob --------------------------------------------
+
+    def rank_table(self) -> np.ndarray:
+        """Rank-R reconstruction of the product table (float)."""
+        exact = exact_product_table(self.n_bits).astype(np.float64)
+        return exact + self.f_table.astype(np.float64) @ self.g_table.astype(np.float64).T
+
+    def rank_behav(self) -> dict:
+        """BEHAV metrics of the rank-R approximation vs the TRUE operator table
+        (how much fidelity the factorization itself costs)."""
+        t_true = self.table.astype(np.float64)
+        t_rank = self.rank_table()
+        d = np.abs(t_rank - t_true)
+        exact = np.maximum(np.abs(exact_product_table(self.n_bits)), 1).astype(np.float64)
+        return {
+            "AVG_ABS_ERR": float(d.mean()),
+            "AVG_ABS_REL_ERR": float(100.0 * (d / exact).mean()),
+            "MAX_ABS_ERR": float(d.max()),
+        }
+
+
+def quantize_tensor(x: jnp.ndarray, n_bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8-style quantization -> (codes, scale).
+
+    Codes are already masked into table-index (two's complement) space.
+    """
+    qmax = (1 << (n_bits - 1)) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q & ((1 << n_bits) - 1), scale
+
+
+def axo_linear(
+    x: jnp.ndarray,              # (..., K) float activations
+    w: jnp.ndarray,              # (K, N) float weights
+    op: AxOOperator,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """y = x @ w evaluated through the approximate operator's arithmetic."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xq, sx = quantize_tensor(x.reshape(-1, k), op.n_bits)
+    wq, sw = quantize_tensor(w, op.n_bits)
+    f = jnp.asarray(op.f_table)
+    g = jnp.asarray(op.g_table)
+    sv = jnp.asarray(op.signed_vals, jnp.float32)
+    if use_kernel and all(
+        d % 128 == 0 for d in (xq.shape[0], k, w.shape[1])
+    ):
+        y = axo_matmul(xq, wq, f, g, sv)
+    else:
+        y = ref_axo_matmul_lowrank(xq, wq, f, g, sv)
+    return (y * (sx * sw)).reshape(*lead, w.shape[1]).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ckpt import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

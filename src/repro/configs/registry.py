@@ -1,0 +1,152 @@
+"""Architecture registry: --arch <id> -> ModelConfig, shape grid, input specs,
+and per-(arch x shape) sharding-rule resolution.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for every
+model input (never allocates), which is what the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from ..models.sharding import BASE_RULES, ShardingRules
+from .base import ModelConfig, SHAPES, ShapeConfig
+
+__all__ = [
+    "ARCH_IDS",
+    "get_arch",
+    "SHAPES",
+    "cell_status",
+    "input_specs",
+    "rules_for",
+    "arch_for_shape",
+]
+
+# arch id -> module name
+ARCH_IDS = {
+    "whisper-medium": "whisper_medium",
+    "deepseek-67b": "deepseek_67b",
+    "starcoder2-3b": "starcoder2_3b",
+    "granite-3-2b": "granite_3_2b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "mamba2-130m": "mamba2_130m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+}
+
+# Archs with sub-quadratic decode state: the only ones that run long_500k.
+SUBQUADRATIC = {"mamba2-130m", "jamba-v0.1-52b"}
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f".{ARCH_IDS[arch_id]}", package=__package__)
+    return mod.CONFIG
+
+
+def cell_status(arch_id: str, shape_name: str) -> str:
+    """'run' or a skip reason, per the assignment's shape/skip policy."""
+    if shape_name == "long_500k" and arch_id not in SUBQUADRATIC:
+        return ("skip: pure full-attention arch -- O(seq) per decoded token over a "
+                "524288-token dense KV cache (assignment directs the skip)")
+    return "run"
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-specialized config (RoPE table length, perf policy).
+
+    Causal block skipping (perf opt P1) is gated by measurement: it removes
+    37–48% of attention work, a clear win where attention dominates (32k
+    prefill: MFU bound +62%), but its per-q-block loops cost extra KV gathers
+    that regress collective-bound 4k training cells (internlm2: MFU −24%) --
+    so it engages for prefill / long sequences only (EXPERIMENTS.md §Perf P1).
+    """
+    skip = shape.kind == "prefill" or shape.seq_len >= 16384
+    return replace(cfg, max_seq=max(shape.seq_len, cfg.max_seq),
+                   causal_block_skip=skip)
+
+
+def rules_for(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh_model: int = 16,
+    mesh_data: int = 16,
+) -> ShardingRules:
+    """Resolve the logical->mesh rule table for one (arch, shape) cell."""
+    rules = BASE_RULES
+    if cfg.use_fsdp:
+        rules = rules.with_fsdp()
+    param: dict = {}
+    act: dict = {}
+
+    # Tensor-parallel eligibility: only shard dims the mesh divides evenly.
+    if not cfg.shard_heads or cfg.n_heads % mesh_model:
+        param["heads"] = ()
+        act["heads"] = ()
+    if cfg.kv_heads % mesh_model:
+        param["kv_heads"] = ()
+    if cfg.d_ff and cfg.d_ff % mesh_model:
+        param["mlp"] = ()
+        act["mlp"] = ()
+    if cfg.vocab % mesh_model:
+        param["vocab"] = ()
+        act["vocab"] = ()
+    if not cfg.shard_ssm:
+        param["ssm_inner"] = ()
+        act["ssm_inner"] = ()
+        act["ssm_heads"] = ()
+
+    # Megatron-style sequence parallelism on the residual stream during
+    # train/prefill (keeps scan-carried remat tensors 1/TP the size -- without
+    # it the per-layer residual checkpoints alone overflow HBM).
+    if shape.kind in ("train", "prefill") and shape.seq_len % mesh_model == 0:
+        act["res_seq"] = ("model",)
+
+    # Decode: KV caches shard their sequence dim (batch alone cannot cover the
+    # mesh); B == 1 long-context additionally spreads over data.  Heads are
+    # REPLICATED in decode -- a head-sharded q against a seq-sharded cache
+    # makes SPMD all-gather the whole KV per token (measured: ~100x collective
+    # blow-up); with heads replicated the attention reductions over the
+    # sharded seq dim emit only small (B, H, 1, *) all-reduces.
+    if shape.kind == "decode":
+        act["kv_seq"] = ("data", "model") if shape.global_batch == 1 else ("model",)
+        act["kv_enc"] = ("model",)
+        act["heads"] = ()   # SSM states keep their head sharding (no conflict)
+
+    return rules.with_overrides(param=param, act=act)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data inputs.
+
+    train   -> {"batch": {tokens, labels[, enc_embeds | img_embeds]}}
+    prefill -> {"tokens"[, "enc_embeds" | "img_embeds"]}
+    decode  -> {"tokens" (B, 1), "index" ()}   (cache specs come from cache_spec)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    frontends = {}
+    if cfg.encoder is not None:
+        frontends["enc_embeds"] = sds((b, cfg.encoder.n_ctx, d), dtype)
+    if cfg.n_img_tokens:
+        frontends["img_embeds"] = sds((b, cfg.n_img_tokens, d), dtype)
+
+    if shape.kind == "train":
+        return {"batch": {"tokens": sds((b, s)), "labels": sds((b, s)), **frontends}}
+    if shape.kind == "prefill":
+        return {"tokens": sds((b, s)), **frontends}
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1)), "index": sds(())}
+    raise ValueError(f"unknown shape kind {shape.kind!r}")

@@ -1,0 +1,334 @@
+"""End-to-end DSE pipelines (AxOMaP §4.3, Figs. 11-19).
+
+Three search methods over the binary LUT-config space, all sharing one
+surrogate-estimator stack and one hypervolume accounting:
+
+  * ``map``     -- solve the MaP problem battery (wt_B sweep x quad-term sweep x
+                   const_sf bounds) and take the union solution pool.
+  * ``ga``      -- problem-agnostic NSGA-II on surrogate fitness, random init
+                   (this is the AppAxO-style baseline).
+  * ``map+ga``  -- NSGA-II seeded with the MaP pool (the paper's contribution).
+
+PPF (pseudo Pareto front) = Pareto filter under *estimated* metrics of everything
+the search evaluated; VPF (validated Pareto front) = the PPF re-characterized with
+the actual synthesis+behavioral models and Pareto-filtered again.  Hypervolumes for
+both are reported against a shared reference point derived from the training set.
+
+``fixed_library`` is the EvoApprox-style baseline: a frozen, search-free library of
+classic truncation/removal designs, only feasibility-filtered per problem.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .automl import AutoMLRegressor, fit_estimators
+from .correlation import rank_quadratic_terms
+from .dataset import BEHAV_KEY, PPA_KEY, Dataset, characterize, gen_random
+from .miqcp import MapProblem, build_problems, solve_pool
+from .moo import GAResult, hypervolume_2d, nsga2, pareto_mask
+from .operator_model import OperatorSpec
+from .regression import fit_poly
+
+__all__ = [
+    "DSESettings",
+    "DSEResult",
+    "hv_reference",
+    "map_solution_pool",
+    "run_dse",
+    "fixed_library",
+    "CONST_SF_GRID",
+]
+
+# The paper's constraint-scaling grid (Eq. 8).
+CONST_SF_GRID = (0.2, 0.5, 0.8, 1.0, 1.2, 1.5)
+
+
+@dataclass
+class DSESettings:
+    """Knobs shared by every method (defaults sized for the 8x8 operator)."""
+
+    ppa_key: str = PPA_KEY
+    behav_key: str = BEHAV_KEY
+    const_sf: float = 1.0
+    pop_size: int = 64
+    n_gen: int = 100                     # paper uses up to 250; 100 is the default budget here
+    n_quad_grid: tuple[int, ...] = (0, 4, 8, 16, 32)
+    wt_step: float = 0.05
+    pool_size: int = 8
+    seed: int = 0
+    n_estimator_quad: int = 48
+
+
+@dataclass
+class DSEResult:
+    method: str
+    settings: DSESettings
+    ppf_configs: np.ndarray              # (P, L)
+    ppf_objs_est: np.ndarray             # (P, 2) [BEHAV, PPA] estimated
+    vpf_configs: np.ndarray              # (V, L)
+    vpf_objs: np.ndarray                 # (V, 2) characterized
+    hv_ppf: float
+    hv_vpf: float
+    n_evals: int
+    wall_s: float
+    hv_history: list[tuple[int, float]] = field(default_factory=list)
+    ref_point: np.ndarray | None = None
+
+
+def hv_reference(train_ds: Dataset, settings: DSESettings, margin: float = 1.05) -> np.ndarray:
+    """Shared hypervolume reference point: training-set maxima with a margin."""
+    b = train_ds.metrics[settings.behav_key].max()
+    p = train_ds.metrics[settings.ppa_key].max()
+    return np.array([margin * b, margin * p], dtype=np.float64)
+
+
+def _constraint_bounds(train_ds: Dataset, settings: DSESettings) -> tuple[float, float]:
+    """(max_behav, max_ppa) in original units: const_sf x training maxima (Eq. 8)."""
+    b_max = float(train_ds.metrics[settings.behav_key].max())
+    p_max = float(train_ds.metrics[settings.ppa_key].max())
+    return settings.const_sf * b_max, settings.const_sf * p_max
+
+
+def map_solution_pool(
+    spec: OperatorSpec,
+    train_ds: Dataset,
+    settings: DSESettings,
+) -> np.ndarray:
+    """Union MaP solution pool over the wt_B x n_quad battery (§4.3.1)."""
+    X = train_ds.configs.astype(np.float64)
+    yb = train_ds.metrics[settings.behav_key]
+    yp = train_ds.metrics[settings.ppa_key]
+    b_max, p_max = float(yb.max()), float(yp.max())
+
+    ranked_b = rank_quadratic_terms(X, yb)
+    ranked_p = rank_quadratic_terms(X, yp)
+
+    wt_grid = np.arange(0.0, 1.0 + 1e-9, settings.wt_step)
+    problems: list[MapProblem] = []
+    for n_quad in settings.n_quad_grid:
+        bm = fit_poly(X, yb, quad_pairs=ranked_b[:n_quad])
+        pm = fit_poly(X, yp, quad_pairs=ranked_p[:n_quad])
+        problems.extend(
+            build_problems(
+                bm, pm, b_max, p_max, settings.const_sf,
+                wt_grid=wt_grid, n_quad=n_quad,
+            )
+        )
+    return solve_pool(problems, seed=settings.seed, pool_size=settings.pool_size)
+
+
+def _surrogate_eval(
+    estimators: dict[str, AutoMLRegressor], settings: DSESettings
+) -> Callable[[np.ndarray], np.ndarray]:
+    eb = estimators[settings.behav_key]
+    ep = estimators[settings.ppa_key]
+
+    def eval_fn(configs: np.ndarray) -> np.ndarray:
+        X = configs.astype(np.float64)
+        return np.stack([eb.predict(X), ep.predict(X)], axis=-1)
+
+    return eval_fn
+
+
+def _violation_fn(
+    estimators: dict[str, AutoMLRegressor],
+    settings: DSESettings,
+    max_behav: float,
+    max_ppa: float,
+) -> Callable[[np.ndarray], np.ndarray]:
+    eb = estimators[settings.behav_key]
+    ep = estimators[settings.ppa_key]
+
+    def viol(configs: np.ndarray) -> np.ndarray:
+        X = configs.astype(np.float64)
+        vb = np.maximum(0.0, eb.predict(X) - max_behav) / max(abs(max_behav), 1e-9)
+        vp = np.maximum(0.0, ep.predict(X) - max_ppa) / max(abs(max_ppa), 1e-9)
+        return vb + vp
+
+    return viol
+
+
+def _ppf_from_archive(
+    configs: np.ndarray,
+    objs_est: np.ndarray,
+    viol: np.ndarray,
+    max_front: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Feasible estimated-Pareto subset of everything a search evaluated."""
+    feas = viol <= 0
+    if not feas.any():
+        return configs[:0], objs_est[:0]
+    c, o = configs[feas], objs_est[feas]
+    c, idx = np.unique(c, axis=0, return_index=True)
+    o = o[idx]
+    mask = pareto_mask(o)
+    c, o = c[mask], o[mask]
+    if len(c) > max_front:  # cap the synthesis bill, keep extremes + spread
+        order = np.argsort(o[:, 0])
+        keep = np.unique(np.linspace(0, len(c) - 1, max_front).astype(int))
+        c, o = c[order][keep], o[order][keep]
+    return c, o
+
+
+def _validate(
+    spec: OperatorSpec,
+    configs: np.ndarray,
+    settings: DSESettings,
+    ref: np.ndarray,
+    characterize_fn: Callable[[np.ndarray], np.ndarray],
+    max_behav: float,
+    max_ppa: float,
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Re-characterize PPF configs -> VPF (+ its hypervolume)."""
+    if len(configs) == 0:
+        return configs, np.zeros((0, 2)), 0.0
+    objs = characterize_fn(configs)
+    feas = (objs[:, 0] <= max_behav + 1e-9) & (objs[:, 1] <= max_ppa + 1e-9)
+    configs, objs = configs[feas], objs[feas]
+    if len(configs) == 0:
+        return configs, objs, 0.0
+    mask = pareto_mask(objs)
+    configs, objs = configs[mask], objs[mask]
+    return configs, objs, hypervolume_2d(objs, ref)
+
+
+def _default_characterize(
+    spec: OperatorSpec, settings: DSESettings
+) -> Callable[[np.ndarray], np.ndarray]:
+    def fn(configs: np.ndarray) -> np.ndarray:
+        ds = characterize(spec, configs)
+        return ds.objectives(ppa_key=settings.ppa_key, behav_key=settings.behav_key)
+
+    return fn
+
+
+def run_dse(
+    spec: OperatorSpec,
+    train_ds: Dataset,
+    method: str,
+    settings: DSESettings | None = None,
+    estimators: dict[str, AutoMLRegressor] | None = None,
+    map_pool: np.ndarray | None = None,
+    characterize_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+    ref: np.ndarray | None = None,
+) -> DSEResult:
+    """One full DSE run (one method, one const_sf).
+
+    ``characterize_fn`` maps (D, L) configs -> (D, 2) true [BEHAV, PPA]; defaults to
+    the operator-level exhaustive characterization.  Pass an application's objective
+    function for application-specific DSE.
+    """
+    settings = settings or DSESettings()
+    t0 = time.time()
+    if estimators is None:
+        estimators = fit_estimators(
+            train_ds.configs.astype(np.float64),
+            {
+                settings.behav_key: train_ds.metrics[settings.behav_key],
+                settings.ppa_key: train_ds.metrics[settings.ppa_key],
+            },
+            n_quad=settings.n_estimator_quad,
+            seed=settings.seed,
+        )
+    characterize_fn = characterize_fn or _default_characterize(spec, settings)
+    ref = hv_reference(train_ds, settings) if ref is None else ref
+    max_behav, max_ppa = _constraint_bounds(train_ds, settings)
+
+    eval_fn = _surrogate_eval(estimators, settings)
+    viol_fn = _violation_fn(estimators, settings, max_behav, max_ppa)
+
+    if method not in ("ga", "map", "map+ga"):
+        raise ValueError(f"unknown method {method!r}")
+
+    n_evals = 0
+    hv_history: list[tuple[int, float]] = []
+
+    if method in ("map", "map+ga") and map_pool is None:
+        map_pool = map_solution_pool(spec, train_ds, settings)
+
+    if method == "map":
+        pool = map_pool
+        if len(pool) == 0:
+            pool = gen_random(spec, 1, seed=settings.seed)  # degenerate fallback
+        objs_est = eval_fn(pool)
+        viol = viol_fn(pool)
+        n_evals = len(pool)
+        ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
+    else:
+        init = map_pool if method == "map+ga" else None
+        ga: GAResult = nsga2(
+            eval_fn,
+            n_bits=spec.n_luts,
+            pop_size=settings.pop_size,
+            n_gen=settings.n_gen,
+            seed=settings.seed,
+            initial_population=init,
+            violation_fn=viol_fn,
+            hv_ref=ref,
+        )
+        n_evals = len(ga.archive_configs)
+        hv_history = ga.hv_history
+        ppf_c, ppf_o = _ppf_from_archive(ga.archive_configs, ga.archive_objs, ga.archive_viol)
+
+    hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
+    vpf_c, vpf_o, hv_vpf = _validate(
+        spec, ppf_c, settings, ref, characterize_fn, max_behav, max_ppa
+    )
+    return DSEResult(
+        method=method,
+        settings=settings,
+        ppf_configs=ppf_c,
+        ppf_objs_est=ppf_o,
+        vpf_configs=vpf_c,
+        vpf_objs=vpf_o,
+        hv_ppf=hv_ppf,
+        hv_vpf=hv_vpf,
+        n_evals=n_evals,
+        wall_s=time.time() - t0,
+        hv_history=hv_history,
+        ref_point=ref,
+    )
+
+
+def fixed_library(spec: OperatorSpec, n_random_fixed: int = 64) -> np.ndarray:
+    """EvoApprox-style frozen design library (no search, ASIC-derived heuristics).
+
+    Classic truncation schemes + whole-row removals + a small frozen random set:
+    the library is independent of the DSE problem, so under tight constraints many
+    (or all) members are infeasible -- exactly the failure mode the paper reports
+    for EvoApprox designs on FPGAs (Figs. 14, 17-19).
+    """
+    L = spec.n_luts
+    cpr = spec.cols_removable
+    rows: list[np.ndarray] = [np.ones(L, dtype=np.uint8)]
+
+    # Uniform per-row LSB truncation (classic truncated multiplier ladder).
+    for j in range(1, cpr + 1):
+        c = np.ones(L, dtype=np.uint8)
+        for r in range(spec.rows):
+            c[r * cpr : r * cpr + j] = 0
+        rows.append(c)
+    # Diagonal truncation: row r loses j - 2r columns (column-weight aligned).
+    for j in range(1, cpr + 1):
+        c = np.ones(L, dtype=np.uint8)
+        for r in range(spec.rows):
+            k = max(0, j - 2 * r)
+            c[r * cpr : r * cpr + k] = 0
+        rows.append(c)
+    # Whole-row removals.
+    for r in range(spec.rows):
+        c = np.ones(L, dtype=np.uint8)
+        c[r * cpr : (r + 1) * cpr] = 0
+        rows.append(c)
+    # Frozen random members (seeded: the library never changes between problems).
+    rng = np.random.default_rng(1234)
+    rows.extend(rng.integers(0, 2, size=(n_random_fixed, L)).astype(np.uint8))
+
+    out = np.stack(rows)
+    _, idx = np.unique(out, axis=0, return_index=True)
+    return out[np.sort(idx)]

@@ -1,0 +1,42 @@
+"""Behavioral-accuracy (BEHAV) metrics for approximate operator configs.
+
+Metrics follow AxOMaP Table 3: AVG_ABS_ERR, AVG_ABS_REL_ERR (percent), PROB_ERR
+(percent of input pairs producing any error), plus MAX_ABS_ERR and MSE.  All are
+computed exhaustively over all ``2^{2N}`` input pairs, as in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .operator_model import OperatorSpec, exact_product_table, product_tables
+
+BEHAV_METRICS = ("AVG_ABS_ERR", "AVG_ABS_REL_ERR", "PROB_ERR", "MAX_ABS_ERR", "MSE")
+
+__all__ = ["BEHAV_METRICS", "behav_metrics"]
+
+
+def behav_metrics(
+    spec: OperatorSpec, configs: np.ndarray, batch_size: int = 256
+) -> dict[str, np.ndarray]:
+    """Exhaustive BEHAV metrics for a batch of configs.
+
+    Returns a dict of float64 arrays of shape (D,).
+    """
+    configs = np.atleast_2d(np.asarray(configs))
+    d = configs.shape[0]
+    exact = exact_product_table(spec.n_bits).astype(np.int64)
+    denom = np.maximum(np.abs(exact), 1).astype(np.float64)
+
+    out = {k: np.empty(d, dtype=np.float64) for k in BEHAV_METRICS}
+    for lo in range(0, d, batch_size):
+        hi = min(lo + batch_size, d)
+        approx = product_tables(spec, configs[lo:hi]).astype(np.int64)
+        err = approx - exact[None]
+        abs_err = np.abs(err).astype(np.float64)
+        out["AVG_ABS_ERR"][lo:hi] = abs_err.mean(axis=(1, 2))
+        out["AVG_ABS_REL_ERR"][lo:hi] = 100.0 * (abs_err / denom[None]).mean(axis=(1, 2))
+        out["PROB_ERR"][lo:hi] = 100.0 * (err != 0).mean(axis=(1, 2))
+        out["MAX_ABS_ERR"][lo:hi] = abs_err.max(axis=(1, 2))
+        out["MSE"][lo:hi] = (abs_err**2).mean(axis=(1, 2))
+    return out

@@ -1,0 +1,305 @@
+"""LUT-level behavioral model of FPGA-style signed multipliers (AppAxO operator model).
+
+The operator model follows AxOMaP / AppAxO: an approximate operator is an ordered
+binary tuple ``O_i(l_0 .. l_{L-1})`` where ``l_k = 1`` keeps LUT ``k`` of the accurate
+implementation and ``l_k = 0`` removes it.  Removing a LUT zeroes its sum output AND
+truncates the carry out of the associated carry-chain cell (paper Fig. 3 semantics).
+
+Architecture (row-paired partial products, matching the published removable-LUT
+counts: signed 4x4 -> L=10, signed 8x8 -> L=36):
+
+  * ``R = N/2`` rows.  Row ``r`` covers multiplier bits ``a_{2r}, a_{2r+1}``.
+  * Row value ``V_r = coeff_r * B`` with ``coeff_r = a_{2r} + 2*a_{2r+1}`` for
+    ``r < R-1`` and ``coeff_r = a_{2r} - 2*a_{2r+1}`` for the top (sign) row, so that
+    ``sum_r 4^r V_r = A * B`` exactly for two's-complement ``A``.
+  * Each row is computed as a ``W = N+2`` bit carry-chain addition of the two partial
+    products ``T1 = a_{2r} ? B : 0`` and ``T2 = a_{2r+1} ? (+/-B << 1) : 0`` using one
+    LUT + carry cell per column (propagate/generate + MUXCY semantics).
+  * Columns ``0 .. N`` of every row (``N+1`` per row) are REMOVABLE; the top column
+    ``W-1`` (sign handling) and the row-merge adder tree are always accurate.
+    ``L = R * (N+1)``:  4x4 -> 2*5 = 10,  8x8 -> 4*9 = 36.
+
+Removal of column ``j`` in a row forces ``sum_j = 0`` and ``carry_{j+1} = 0``.
+
+Everything is vectorized through a precomputed "row table" over
+``(top?, a0, a1, B, row_mask)`` so that characterizing thousands of configs over all
+``2^{2N}`` input pairs is a handful of numpy gathers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "OperatorSpec",
+    "spec_for",
+    "RowTables",
+    "row_tables",
+    "config_to_masks",
+    "masks_to_config",
+    "accurate_config",
+    "product_tables",
+    "exact_product_table",
+    "error_tables",
+    "simulate_product",
+]
+
+
+@dataclass(frozen=True)
+class OperatorSpec:
+    """Static description of one signed multiplier operator family."""
+
+    n_bits: int                       # operand width N (signed)
+    rows: int = field(init=False)     # number of partial-product rows R = N/2
+    width: int = field(init=False)    # per-row adder width W = N + 2
+    cols_removable: int = field(init=False)  # removable columns per row = N + 1
+    n_luts: int = field(init=False)   # total removable LUTs L = R * (N+1)
+
+    def __post_init__(self) -> None:
+        if self.n_bits % 2 != 0 or self.n_bits < 2:
+            raise ValueError(f"n_bits must be even and >= 2, got {self.n_bits}")
+        object.__setattr__(self, "rows", self.n_bits // 2)
+        object.__setattr__(self, "width", self.n_bits + 2)
+        object.__setattr__(self, "cols_removable", self.n_bits + 1)
+        object.__setattr__(self, "n_luts", self.rows * (self.n_bits + 1))
+
+    @property
+    def n_inputs(self) -> int:
+        """Number of distinct values of one signed operand."""
+        return 1 << self.n_bits
+
+    @property
+    def operand_values(self) -> np.ndarray:
+        """All signed operand values in index order 0 .. 2^N-1 (two's complement)."""
+        u = np.arange(self.n_inputs, dtype=np.int64)
+        return np.where(u >= self.n_inputs // 2, u - self.n_inputs, u)
+
+    @property
+    def n_row_masks(self) -> int:
+        return 1 << self.cols_removable
+
+
+@functools.lru_cache(maxsize=None)
+def spec_for(n_bits: int) -> OperatorSpec:
+    return OperatorSpec(n_bits)
+
+
+# ---------------------------------------------------------------------------
+# Row tables
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RowTables:
+    """Precomputed per-row behavior, indexed ``[top, a0, a1, b_idx, mask]``.
+
+    value:   signed row output (int32) after carry-truncated addition.
+    sum_p1:  P(sum bit j == 1) per column, indexed ``[top, mask, j]`` under uniform
+             (a0, a1, B) -- used by the switching-activity power model.
+    out_p1:  P(output bit j == 1) of the (two's complement, width-16) row value,
+             indexed ``[top, mask, j]`` -- drives the merge-adder activity model.
+    """
+
+    spec: OperatorSpec
+    value: np.ndarray      # (2, 2, 2, 2^N, 2^(N+1)) int32
+    sum_p1: np.ndarray     # (2, 2^(N+1), W) float64
+    out_p1: np.ndarray     # (2, 2^(N+1), 16) float64
+
+
+def _row_values(spec: OperatorSpec) -> np.ndarray:
+    """Exhaustive carry-chain evaluation of one row for every mask.
+
+    Returns int32 array of shape (2[top], 2[a0], 2[a1], 2^N[b], 2^(N+1)[mask]).
+    """
+    n, w = spec.n_bits, spec.width
+    n_b = spec.n_inputs
+    n_mask = spec.n_row_masks
+
+    b = spec.operand_values.astype(np.int64)  # (n_b,) signed values
+
+    top = np.arange(2).reshape(2, 1, 1, 1, 1)
+    a0 = np.arange(2).reshape(1, 2, 1, 1, 1)
+    a1 = np.arange(2).reshape(1, 1, 2, 1, 1)
+    bv = b.reshape(1, 1, 1, n_b, 1)
+    mask = np.arange(n_mask, dtype=np.int64).reshape(1, 1, 1, 1, n_mask)
+
+    modw = (1 << w) - 1
+    t1 = np.where(a0 == 1, bv & modw, 0)
+    bx = np.where(top == 1, -bv, bv)
+    t2 = np.where(a1 == 1, (bx << 1) & modw, 0)
+
+    s = np.zeros(np.broadcast_shapes(t1.shape, t2.shape, mask.shape), dtype=np.int64)
+    c = np.zeros_like(s)
+    for j in range(w):
+        t1j = (t1 >> j) & 1
+        t2j = (t2 >> j) & 1
+        p = t1j ^ t2j
+        g = t1j & t2j
+        sj = p ^ c
+        c_next = np.where(p == 1, c, g)
+        if j < spec.cols_removable:
+            kept = (mask >> j) & 1
+            sj = sj * kept
+            c_next = c_next * kept
+        s = s | (sj << j)
+        c = c_next
+
+    # Interpret W-bit two's complement.
+    sign = 1 << (w - 1)
+    val = np.where(s & sign != 0, s - (1 << w), s)
+    return val.astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def row_tables(n_bits: int) -> RowTables:
+    spec = spec_for(n_bits)
+    value = _row_values(spec)  # (2,2,2,n_b,n_mask)
+    w = spec.width
+    n_mask = spec.n_row_masks
+
+    # --- per-column sum-bit statistics (for the power model) ------------------
+    # Reconstruct W-bit unsigned pattern of the row output.
+    u = value.astype(np.int64) & ((1 << w) - 1)
+    sum_p1 = np.empty((2, n_mask, w), dtype=np.float64)
+    out_p1 = np.empty((2, n_mask, 16), dtype=np.float64)
+    u16 = value.astype(np.int64) & 0xFFFF
+    for t in range(2):
+        # average over a0, a1, b -> (n_mask,)
+        for j in range(w):
+            bits = (u[t] >> j) & 1
+            sum_p1[t, :, j] = bits.mean(axis=(0, 1, 2))
+        for j in range(16):
+            bits = (u16[t] >> j) & 1
+            out_p1[t, :, j] = bits.mean(axis=(0, 1, 2))
+
+    return RowTables(spec=spec, value=value, sum_p1=sum_p1, out_p1=out_p1)
+
+
+# ---------------------------------------------------------------------------
+# Config <-> per-row masks
+# ---------------------------------------------------------------------------
+
+
+def config_to_masks(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
+    """(..., L) {0,1} array -> (..., R) integer per-row masks."""
+    configs = np.asarray(configs)
+    if configs.shape[-1] != spec.n_luts:
+        raise ValueError(f"config length {configs.shape[-1]} != L={spec.n_luts}")
+    cpr = spec.cols_removable
+    out = np.zeros(configs.shape[:-1] + (spec.rows,), dtype=np.int64)
+    for r in range(spec.rows):
+        for j in range(cpr):
+            out[..., r] |= configs[..., r * cpr + j].astype(np.int64) << j
+    return out
+
+
+def masks_to_config(spec: OperatorSpec, masks: np.ndarray) -> np.ndarray:
+    """(..., R) int masks -> (..., L) {0,1} uint8 config."""
+    masks = np.asarray(masks, dtype=np.int64)
+    cpr = spec.cols_removable
+    out = np.zeros(masks.shape[:-1] + (spec.n_luts,), dtype=np.uint8)
+    for r in range(spec.rows):
+        for j in range(cpr):
+            out[..., r * cpr + j] = (masks[..., r] >> j) & 1
+    return out
+
+
+def accurate_config(spec: OperatorSpec) -> np.ndarray:
+    return np.ones(spec.n_luts, dtype=np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Product / error tables
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def exact_product_table(n_bits: int) -> np.ndarray:
+    """(2^N, 2^N) int32 exact signed products, indexed by two's-complement codes."""
+    spec = spec_for(n_bits)
+    v = spec.operand_values
+    return np.multiply.outer(v, v).astype(np.int32)
+
+
+def product_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
+    """Approximate product tables for a batch of configs.
+
+    Args:
+      configs: (D, L) {0,1} array.
+    Returns:
+      (D, 2^N, 2^N) int32; axis 1 indexes operand A's two's-complement code,
+      axis 2 operand B's.
+    """
+    configs = np.atleast_2d(np.asarray(configs))
+    tabs = row_tables(spec.n_bits)
+    masks = config_to_masks(spec, configs)  # (D, R)
+    n_in = spec.n_inputs
+
+    a_codes = np.arange(n_in, dtype=np.int64)
+
+    d = configs.shape[0]
+    out = np.zeros((d, n_in, n_in), dtype=np.int32)
+    for r in range(spec.rows):
+        top = 1 if r == spec.rows - 1 else 0
+        # (a0, a1) takes only 4 values: gather the small (4, B, D) slab first,
+        # then expand over the A axis -- ~65x fewer large-table gathers.
+        # reshape(4, ...) flattens (a0, a1) with a0 major -> index = 2*a0 + a1.
+        pair_idx = ((((a_codes >> (2 * r)) & 1) << 1) | ((a_codes >> (2 * r + 1)) & 1))
+        tab = tabs.value[top].reshape(4, n_in, spec.n_row_masks)  # (4, B, M)
+        small = tab[:, :, masks[:, r]]                            # (4, B, D)
+        small = np.ascontiguousarray(small.transpose(2, 0, 1))    # (D, 4, B)
+        out += small[:, pair_idx, :] << (2 * r)                   # (D, A, B)
+    return out
+
+
+def error_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
+    """approx - exact, (D, 2^N, 2^N) int32."""
+    return (
+        product_tables(spec, configs).astype(np.int64)
+        - exact_product_table(spec.n_bits)[None].astype(np.int64)
+    ).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Direct (slow) single-pair simulation -- independent oracle used by tests.
+# ---------------------------------------------------------------------------
+
+
+def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> int:
+    """Bit-level simulation of one multiply, independent of the table machinery."""
+    config = np.asarray(config).astype(np.int64)
+    n, w = spec.n_bits, spec.width
+    half = 1 << (n - 1)
+    if not (-half <= a < half and -half <= b < half):
+        raise ValueError("operand out of range")
+    cpr = spec.cols_removable
+    modw = (1 << w) - 1
+    total = 0
+    for r in range(spec.rows):
+        top = r == spec.rows - 1
+        a0 = (a >> (2 * r)) & 1
+        a1 = (a >> (2 * r + 1)) & 1
+        t1 = (b & modw) if a0 else 0
+        bx = -b if top else b
+        t2 = ((bx << 1) & modw) if a1 else 0
+        s = 0
+        c = 0
+        for j in range(w):
+            t1j = (t1 >> j) & 1
+            t2j = (t2 >> j) & 1
+            p = t1j ^ t2j
+            g = t1j & t2j
+            sj = p ^ c
+            c_next = c if p else g
+            if j < cpr and config[r * cpr + j] == 0:
+                sj = 0
+                c_next = 0
+            s |= sj << j
+            c = c_next
+        if s & (1 << (w - 1)):
+            s -= 1 << w
+        total += s << (2 * r)
+    return int(total)

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticLM
+
+__all__ = ["SyntheticLM"]

@@ -1,0 +1,102 @@
+"""Deterministic, seekable synthetic LM data pipeline.
+
+The batch for step ``t`` is a pure function of ``(seed, t)`` -- there is no
+iterator state to checkpoint or lose, which is the fault-tolerance property the
+train loop relies on: after a restart, ``batch(t)`` reproduces the exact batch
+bitwise.  Works host-side (numpy, for feeding) and device-side (jit-able, for
+fully on-device input pipelines).
+
+The token stream is a Zipf-distributed unigram draw mixed with a first-order
+Markov "phrase" structure so the loss curve is non-trivial (a model can learn
+it), and labels are next-token targets with the final position masked.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["SyntheticLM"]
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    seed: int = 0
+    zipf_a: float = 1.2
+    markov_p: float = 0.7        # P(next = f(prev)) vs fresh unigram draw
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step & 0x7FFFFFFF])
+        )
+
+    # -- host-side ----------------------------------------------------------
+
+    def batch(self, step: int) -> dict:
+        """Numpy batch for one step: {'tokens','labels'[, stub embeddings]}."""
+        b, s = self.shape.global_batch, self.shape.seq_len
+        v = self.cfg.vocab
+        rng = self._rng(step)
+
+        # Zipf unigram (clipped to vocab) + deterministic "phrase" transitions.
+        uni = np.minimum(rng.zipf(self.zipf_a, size=(b, s)), v - 1)
+        chain = (uni * 2654435761 + 12345) % v     # cheap deterministic f(prev)
+        use_chain = rng.random((b, s)) < self.markov_p
+        tokens = uni.copy()
+        tokens[:, 1:] = np.where(
+            use_chain[:, 1:], chain[:, :-1], uni[:, 1:]
+        )
+        tokens = tokens.astype(np.int32)
+
+        labels = np.full((b, s), -1, dtype=np.int32)
+        labels[:, :-1] = tokens[:, 1:]
+
+        out = {"tokens": tokens, "labels": labels}
+        d = self.cfg.d_model
+        if self.cfg.encoder is not None:
+            out["enc_embeds"] = rng.standard_normal(
+                (b, self.cfg.encoder.n_ctx, d)
+            ).astype(np.float32) * 0.02
+        if self.cfg.n_img_tokens:
+            out["img_embeds"] = rng.standard_normal(
+                (b, self.cfg.n_img_tokens, d)
+            ).astype(np.float32) * 0.02
+        return out
+
+    # -- device-side (jit-able) ----------------------------------------------
+
+    def device_batch(self, step):
+        """Same interface, pure-JAX (usable inside a jitted input pipeline).
+
+        Not bitwise-identical to the numpy path (different RNG), but equally
+        deterministic/seekable; used when feeding from host is the bottleneck.
+        """
+        b, s = self.shape.global_batch, self.shape.seq_len
+        v = self.cfg.vocab
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        # Zipf via inverse-CDF approximation on a truncated support.
+        u = jax.random.uniform(k1, (b, s), minval=1e-6, maxval=1.0)
+        uni = jnp.clip((u ** (-1.0 / (self.zipf_a - 1.0))).astype(jnp.int32) - 1, 0, v - 1)
+        chain = (uni * 2654435761 + 12345) % v
+        use_chain = jax.random.uniform(k2, (b, s)) < self.markov_p
+        tokens = uni.at[:, 1:].set(
+            jnp.where(use_chain[:, 1:], chain[:, :-1], uni[:, 1:])
+        )
+        labels = jnp.full((b, s), -1, jnp.int32).at[:, :-1].set(tokens[:, 1:])
+        out = {"tokens": tokens, "labels": labels}
+        d = self.cfg.d_model
+        if self.cfg.encoder is not None:
+            out["enc_embeds"] = 0.02 * jax.random.normal(
+                k3, (b, self.cfg.encoder.n_ctx, d), jnp.bfloat16)
+        if self.cfg.n_img_tokens:
+            out["img_embeds"] = 0.02 * jax.random.normal(
+                k4, (b, self.cfg.n_img_tokens, d), jnp.bfloat16)
+        return out

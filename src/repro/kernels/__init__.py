@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+* ``axo_matmul``      -- the paper's approximate-operator arithmetic, adapted
+                         to the MXU as exact-matmul + rank-R error correction.
+* ``flash_attention`` -- blockwise online-softmax attention (causal + GQA).
+* ``ssd_scan``        -- Mamba-2 chunked state-space scan.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec) with an ``ops.py``
+jit wrapper and a ``ref.py`` pure-jnp oracle.  On this CPU-only container the
+kernels validate under ``interpret=True``; on TPU the same BlockSpecs drive
+HBM->VMEM pipelining.
+"""
+
+from .ops import axo_matmul, flash_attention, on_tpu, ssd_scan
+
+__all__ = ["axo_matmul", "flash_attention", "ssd_scan", "on_tpu"]

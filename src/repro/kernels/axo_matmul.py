@@ -1,0 +1,99 @@
+"""AxO matmul Pallas kernel -- the paper's operator, TPU-adapted.
+
+An FPGA realizes the approximate multiplier in LUT fabric; a TPU's MXU only
+does exact MACs.  The TPU-native decomposition (DESIGN.md §3.2) is
+
+    T[a, b] = a*b + E[a, b]          (E = exact 2^n x 2^n error table)
+    E[a, b] ~ sum_r f_r[a] * g_r[b]  (rank-R SVD of E)
+
+so   AxO-matmul(A, B) = A.B  +  sum_r F_r(A) @ G_r(B)
+
+where F_r(A)[m,k] = f_r[A[m,k]] is a per-element 2^n-entry table lookup.  The
+correction is R extra MXU matmuls over feature maps -- systolic-friendly, no
+gathers in the inner loop (the lookups hit a VMEM-resident (2^n, R) table).
+
+Kernel: classic (M, N, K) blocked matmul; the K grid axis is innermost so the
+fp32 accumulator lives in a VMEM scratch across K steps.  Block shapes are
+MXU-aligned (multiples of 128 on M/N, 128 on K by default).
+
+The bit-exact table path (a gather per (m, k, n)) exists only in ref.py as the
+oracle; rank sweep accuracy is characterized by repro.axo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["axo_matmul_pallas"]
+
+
+def _kernel(a_ref, b_ref, fa_ref, gb_ref, o_ref, acc_ref, *, n_k: int, rank: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis.
+
+    a_ref:  (bm, bk) f32   signed values of A's codes
+    b_ref:  (bk, bn) f32   signed values of B's codes
+    fa_ref: (R, bm, bk) f32  left error factors F_r(A), precomputed lookups
+    gb_ref: (R, bk, bn) f32  right error factors G_r(B)
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    for r in range(rank):                       # static unroll: R extra matmuls
+        acc = acc + jnp.dot(
+            fa_ref[r], gb_ref[r], preferred_element_type=jnp.float32
+        )
+    acc_ref[...] += acc
+
+    @pl.when(k_step == n_k - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def axo_matmul_pallas(
+    a_vals: jnp.ndarray,         # (M, K) f32 signed operand values
+    b_vals: jnp.ndarray,         # (K, N) f32
+    fa: jnp.ndarray,             # (R, M, K) f32 left error factors
+    gb: jnp.ndarray,             # (R, K, N) f32 right error factors
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Blocked AxO matmul; see module docstring.  Returns (M, N) f32."""
+    m, k = a_vals.shape
+    n = b_vals.shape[1]
+    rank = fa.shape[0]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, rank=rank),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((rank, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((rank, bk, bn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_vals, b_vals, fa, gb)

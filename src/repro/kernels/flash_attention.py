@@ -1,0 +1,109 @@
+"""Flash attention Pallas kernel (causal + GQA), TPU BlockSpec tiling.
+
+Grid (B, H, nQ, nK) with the KV axis innermost: online-softmax statistics
+(m, l) and the fp32 output accumulator live in VMEM scratch across the KV
+steps of one (batch, head, q-block).  Causal blocks entirely above the
+diagonal are masked cheaply (their contribution underflows to zero through
+exp(-inf)); GQA maps each query head to its KV group via index_map, so KV
+blocks are fetched once per group -- never materialized per-head.
+
+Oracle: kernels.ref.ref_flash_attention; parity swept over shapes/dtypes in
+tests/test_kernels.py (interpret=True executes this exact body on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, n_k: int, bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                        # (bq, hd)
+    k = k_ref[0, 0]                        # (bk, hd)
+    v = v_ref[0, 0]                        # (bk, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "scale")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,              # (B, H, Sq, hd)
+    k: jnp.ndarray,              # (B, G, Skv, hd)
+    v: jnp.ndarray,              # (B, G, Skv, hd)
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, sq, hd = q.shape
+    g, skv = k.shape[1], k.shape[2]
+    rep = h // g
+    scale = float(1.0 / (hd ** 0.5)) if scale is None else scale
+    bq, bk = min(bq, sq), min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    n_k = skv // bk
+
+    grid = (b, h, sq // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, n_k=n_k, bq=bq, bk=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            # GQA: query head hi reads KV group hi // rep
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the container is CPU-only; interpret
+mode executes the kernel bodies in Python for correctness validation) and to
+False on TPU, where the same BlockSpecs drive real VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .axo_matmul import axo_matmul_pallas
+from .flash_attention import flash_attention_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["on_tpu", "axo_matmul", "flash_attention", "ssd_scan"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def axo_matmul(a_codes, b_codes, f_table, g_table, signed_vals,
+               bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool | None = None):
+    """Rank-R AxO matmul from integer CODES (table-index space).
+
+    The code->value and code->factor lookups are tiny (2^n entries) and run in
+    XLA before the kernel; the kernel itself is pure MXU work.
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    a_vals = signed_vals[a_codes].astype(jnp.float32)
+    b_vals = signed_vals[b_codes].astype(jnp.float32)
+    fa = jnp.moveaxis(f_table[a_codes], -1, 0).astype(jnp.float32)  # (R, M, K)
+    gb = jnp.moveaxis(g_table[b_codes], -1, 0).astype(jnp.float32)  # (R, K, N)
+    return axo_matmul_pallas(
+        a_vals, b_vals, fa, gb, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    bq: int = 128, bk: int = 128, interpret: bool | None = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, bq=bq, bk=bk, interpret=interpret
+    )
+
+
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int = 128,
+             interpret: bool | None = None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret)

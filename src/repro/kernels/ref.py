@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``ref_*`` implements the kernel's exact math with plain jax.numpy --
+no blocking, no scratch, no pipelining -- and is what the per-kernel tests
+``assert_allclose`` against across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_axo_matmul_exact", "ref_axo_matmul_lowrank",
+           "ref_flash_attention", "ref_ssd_scan"]
+
+
+# ---------------------------------------------------------------------------
+# AxO matmul
+# ---------------------------------------------------------------------------
+
+
+def ref_axo_matmul_exact(a_codes: jnp.ndarray, b_codes: jnp.ndarray,
+                         table: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact approximate-operator matmul through the product table.
+
+    a_codes (M, K), b_codes (K, N) -- two's-complement uint codes.
+    table (2^n, 2^n) int32 -- approximate products T[a, b].
+    Returns (M, N) int32 = sum_k T[a[m,k], b[k,n]].
+    """
+    prod = table[a_codes[:, :, None], b_codes[None, :, :]]      # (M, K, N)
+    return prod.sum(axis=1, dtype=jnp.int32)
+
+
+def ref_axo_matmul_lowrank(
+    a_codes: jnp.ndarray, b_codes: jnp.ndarray,
+    f_table: jnp.ndarray,        # (2^n, R) per-code left factors of E
+    g_table: jnp.ndarray,        # (2^n, R) per-code right factors
+    signed_vals: jnp.ndarray,    # (2^n,) signed value of each code
+) -> jnp.ndarray:
+    """Deployment semantics: exact product + rank-R error-table correction.
+
+    out = A.B (exact ints) + sum_r F_r(A) @ G_r(B),  E[a,b] ~ sum_r f_r[a] g_r[b]
+    """
+    av = signed_vals[a_codes].astype(jnp.float32)               # (M, K)
+    bv = signed_vals[b_codes].astype(jnp.float32)               # (K, N)
+    exact = av @ bv
+    fa = f_table[a_codes]                                        # (M, K, R)
+    gb = g_table[b_codes]                                        # (K, N, R)
+    corr = jnp.einsum("mkr,knr->mn", fa, gb)
+    return exact + corr
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (causal + GQA)
+# ---------------------------------------------------------------------------
+
+
+def ref_flash_attention(
+    q: jnp.ndarray,              # (B, H, Sq, hd)
+    k: jnp.ndarray,              # (B, G, Skv, hd)
+    v: jnp.ndarray,              # (B, G, Skv, hd)
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, sq, hd = q.shape
+    g, skv = k.shape[1], k.shape[2]
+    rep = h // g
+    scale = (1.0 / (hd ** 0.5)) if scale is None else scale
+    kh = jnp.repeat(k, rep, axis=1)
+    vh = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kh, preferred_element_type=jnp.float32)
+    s = s * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vh.dtype), vh,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2) chunked scan
+# ---------------------------------------------------------------------------
+
+
+def ref_ssd_scan(
+    x: jnp.ndarray,              # (B, S, H, P)
+    dt: jnp.ndarray,             # (B, S, H) positive
+    a: jnp.ndarray,              # (H,) negative
+    bmat: jnp.ndarray,           # (B, S, G, N)
+    cmat: jnp.ndarray,           # (B, S, G, N)
+    init_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (exact) state-space recurrence:
+    h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t;  y_t = C_t . h_t."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)      # (B,S,H,N)
+    ch = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(hprev, t):
+        decay = jnp.exp(dtf[:, t] * a[None, :])                 # (B,H)
+        upd = jnp.einsum("bhn,bh,bhp->bhpn", bh[:, t], dtf[:, t], xf[:, t])
+        hnew = hprev * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ch[:, t], hnew)
+        return hnew, y
+
+    hfin, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hfin

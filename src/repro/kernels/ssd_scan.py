@@ -1,0 +1,116 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+Grid (B, nc) with the chunk axis innermost: the (H, P, N) SSD state lives in
+VMEM scratch and is carried across the chunk steps of one batch row (TPU grid
+execution is sequential in the minor axis, which is exactly the inter-chunk
+recurrence).  Per chunk:
+
+  1. intra-chunk quadratic term   y_diag = (C B^T . L) dt x      (MXU matmuls)
+  2. cross-chunk term             y_off  = C . state_in . decays
+  3. state update                 state  = decay_chunk * state_in + B^T dt x
+
+All cumulative-decay math is fp32; group->head broadcast happens on the tiny
+(Q, G, N) chunk tensors in VMEM.
+
+Oracle: kernels.ref.ref_ssd_scan (sequential recurrence, exact); the chunked
+algebra here matches models.ssm.ssd_chunked (the XLA execution path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, state_ref,
+            *, n_chunks: int, rep: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, H)
+    a = a_ref[...].astype(jnp.float32)      # (H,)
+    bmat = b_ref[0].astype(jnp.float32)     # (Q, G, N)
+    cmat = c_ref[0].astype(jnp.float32)     # (Q, G, N)
+
+    q = x.shape[0]
+    bh = jnp.repeat(bmat, rep, axis=1)      # (Q, H, N)
+    ch = jnp.repeat(cmat, rep, axis=1)
+
+    da = dt * a[None, :]                    # (Q, H)
+    da_cs = jnp.cumsum(da, axis=0)          # inclusive
+
+    # 1) intra-chunk (lower-triangular decay kernel L)
+    seg = da_cs[:, None, :] - da_cs[None, :, :]            # (Q, Q, H) l - s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)  # (Q, Q, H)
+    scores = jnp.einsum("lhn,shn->hls", ch, bh)            # (H, Q, Q)
+    y = jnp.einsum("hls,lsh,sh,shp->lhp",
+                   scores, l_mat, dt, x)                   # (Q, H, P)
+
+    # 2) cross-chunk: contribution of the state entering this chunk
+    state_in = state_ref[...]                              # (H, P, N)
+    y = y + jnp.einsum("lhn,hpn,lh->lhp", ch, state_in, jnp.exp(da_cs))
+
+    # 3) state update
+    decay_out = jnp.exp(da_cs[-1:, :] - da_cs)             # (Q, H)
+    upd = jnp.einsum("shn,sh,shp->hpn", bh, decay_out * dt, x)
+    state_ref[...] = state_in * jnp.exp(da_cs[-1])[:, None, None] + upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hfin_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,              # (B, S, H, P)
+    dt: jnp.ndarray,             # (B, S, H)
+    a: jnp.ndarray,              # (H,)
+    bmat: jnp.ndarray,           # (B, S, G, N)
+    cmat: jnp.ndarray,           # (B, S, G, N)
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    grid = (b, nc)
+    y, hfin = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc, rep=rep),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((h,), lambda bi, ci: (0,)),
+            pl.BlockSpec((1, chunk, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, g, n), lambda bi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)
+    return y, hfin

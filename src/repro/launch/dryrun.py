@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices back the production meshes; every step function is lowered from
+ShapeDtypeStructs (no allocation), compiled through the full SPMD partitioner,
+and its memory_analysis / cost_analysis / collective schedule are recorded for
+§Dry-run and §Roofline of EXPERIMENTS.md.
+
+``--probe`` additionally runs the loop-corrected cost probes (see costprobe.py)
+-- XLA counts while bodies once, so scan-over-layers programs under-report
+FLOPs without them.  The roofline table uses probe-corrected numbers.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--out DIR]
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from ..configs.base import SHAPES
+from ..configs.registry import (
+    ARCH_IDS,
+    arch_for_shape,
+    cell_status,
+    get_arch,
+    rules_for,
+)
+from .accounting import param_counts
+from .costprobe import corrected_costs, measure_compiled, probe_variants
+from .lowering import lower_step
+from .mesh import make_production_mesh
+from .roofline import Roofline, model_flops
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose: bool = True,
+    probe: bool = False,
+):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    status = cell_status(arch_id, shape_name)
+    if status != "run":
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": status}
+
+    shape = SHAPES[shape_name]
+    cfg = arch_for_shape(get_arch(arch_id), shape)
+    rules = rules_for(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    lowered = lower_step(cfg, shape, mesh, rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    raw = measure_compiled(compiled)
+
+    corrected = None
+    t_probe = 0.0
+    if probe:
+        t0 = time.time()
+        measures = {}
+        for tag, pcfg in probe_variants(cfg).items():
+            plow = lower_step(pcfg, shape, mesh, rules)
+            measures[tag] = measure_compiled(plow.compile())
+        corrected = corrected_costs(cfg, measures)
+        t_probe = time.time() - t0
+
+    counts = param_counts(cfg)
+    n_active = counts["active_nonemb"] + counts["embedding"] // (
+        2 if not cfg.tie_embeddings else 1
+    )
+    mfl = model_flops(cfg, shape, n_active, shape.kind)
+
+    use = corrected if corrected is not None else raw
+    rl = Roofline(
+        arch=arch_id, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=use["flops"], hlo_bytes=use["bytes"],
+        coll_bytes=use["coll_total"],
+        coll_breakdown={k[5:]: v for k, v in use.items() if k.startswith("coll_")
+                        and k != "coll_total"},
+        model_flops=mfl,
+    )
+
+    if verbose:
+        print(f"--- {arch_id} x {shape_name} x {mesh_name} ---")
+        print(f"memory_analysis: {mem}")
+        print("cost (raw):       flops=%.3e bytes=%.3e coll=%.3e" %
+              (raw["flops"], raw["bytes"], raw["coll_total"]))
+        if corrected:
+            print("cost (corrected): flops=%.3e bytes=%.3e coll=%.3e" %
+                  (corrected["flops"], corrected["bytes"], corrected["coll_total"]))
+        print("roofline: t_comp=%.4fs t_mem=%.4fs t_coll=%.4fs -> %s" %
+              (rl.t_compute, rl.t_memory, rl.t_collective, rl.bottleneck))
+
+    rec = {"status": "ok", "t_lower_s": t_lower, "t_compile_s": t_compile,
+           "t_probe_s": t_probe, "probe_corrected": bool(corrected)}
+    rec.update(rl.row())
+    rec["raw_flops"] = raw["flops"]
+    rec["raw_bytes"] = raw["bytes"]
+    rec["raw_coll_bytes"] = raw["coll_total"]
+    rec["coll_breakdown"] = rl.coll_breakdown
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = counts["active"]
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    # "fits" check: args + temps minus donated aliases vs 16 GiB HBM of v5e
+    hbm = 16 * 1024**3
+    need = (rec.get("argument_size_in_bytes", 0) + rec.get("temp_size_in_bytes", 0)
+            - rec.get("alias_size_in_bytes", 0))
+    rec["hbm_need_bytes"] = need
+    rec["fits_v5e_hbm"] = bool(need <= hbm)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="run loop-corrected cost probes (roofline-grade costs)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON already records status=ok/skip")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    if args.list:
+        for a, s, m in cells:
+            print(a, s, "2x16x16" if m else "16x16", cell_status(a, s))
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, m in cells:
+        mesh_name = "2x16x16" if m else "16x16"
+        out_path = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(out_path):
+            with open(out_path) as f:
+                prev = json.load(f)
+            st = str(prev.get("status", ""))
+            if st == "ok" and (prev.get("probe_corrected") or not args.probe):
+                print(f"[cached] {a} {s} {mesh_name}")
+                continue
+            if st.startswith("skip"):
+                print(f"[cached-skip] {a} {s} {mesh_name}")
+                continue
+        try:
+            rec = run_cell(a, s, m, verbose=not args.quiet, probe=args.probe)
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "status": f"FAIL: {type(exc).__name__}: {exc}"}
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        print(f"[{rec.get('status', '?')}] {a} {s} {mesh_name}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""Training driver: --arch <id> end-to-end on whatever devices exist.
+
+On this CPU container it trains the REDUCED config of the chosen architecture
+(the full configs are dry-run-only by design); on a real fleet the same driver
+runs the full config -- everything (mesh, shardings, checkpointing, loop) is
+identical, only the config source changes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \\
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ShapeConfig
+from ..configs.registry import ARCH_IDS, get_arch
+from ..data.synthetic import SyntheticLM
+from ..models.model import model_spec
+from ..models.sharding import BASE_RULES
+from ..models.spec import count_params, init_params
+from ..optim import cosine_schedule, make_optimizer
+from ..train import TrainLoopConfig, train_loop
+from .steps import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--int8-accum", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (not reduced) config -- fleet scale only")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = get_arch(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    rules = BASE_RULES
+
+    spec = model_spec(cfg)
+    print(f"arch={cfg.name} params={count_params(spec):,} "
+          f"tokens/step={shape.tokens:,} optimizer={cfg.optimizer}")
+
+    opt = make_optimizer(
+        cfg.optimizer,
+        cosine_schedule(args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps),
+    )
+    data = SyntheticLM(cfg, shape, seed=args.seed)
+    step_jit = jax.jit(make_train_step(cfg, rules, opt, accum_steps=args.accum,
+                                       int8_accum=args.int8_accum))
+
+    def init_state():
+        params = init_params(spec, seed=args.seed)
+        return params, opt.init(params)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+
+    def step_fn(params, opt_state, step, batch):
+        return step_jit(params, opt_state, jnp.int32(int(step)), batch)
+
+    out = train_loop(
+        step_fn, init_state, batch_fn,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir),
+    )
+    first = out["history"][0][1] if out["history"] else float("nan")
+    last = out["history"][-1][1] if out["history"] else float("nan")
+    print(f"done: steps={len(out['history'])} loss {first:.4f} -> {last:.4f} "
+          f"restarts={out['restarts']} stragglers={out['stragglers']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Optimizers and distributed-training numerics.
+
+Minimal optax-like interface over raw pytrees, plus a ``state_spec`` hook so the
+launcher can derive optimizer-state shardings the same way it derives parameter
+shardings (required to dry-run lower a full train step without allocation).
+"""
+
+from .adamw import adamw
+from .adafactor import adafactor
+from .base import Optimizer, apply_updates
+from .clip import clip_by_global_norm, global_norm
+from .compress import compress_int8, decompress_int8, compressed_psum
+from .schedule import cosine_schedule
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "compressed_psum",
+    "make_optimizer",
+]
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,89 @@
+"""Adafactor (factored second moments) -- the only optimizer whose state fits
+the 671B/1T archs on a 256-chip pod (see DESIGN.md §5 memory honesty).
+
+Matrices (ndim >= 2) store row/col second-moment factors over the last two
+dims; vectors store the full second moment.  First moment omitted (beta1=0),
+update clipping by RMS as in the paper (Shazeer & Stern, 2018).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from ..models.spec import ParamSpec
+from .base import Optimizer
+
+__all__ = ["adafactor"]
+
+
+def _is_factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(
+    lr_fn,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _is_factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        # step-dependent decay as in the paper: min(decay, 1 - step^-0.8)
+        t = (step + 1).astype(jnp.float32)
+        beta = jnp.minimum(decay, 1.0 - t ** -0.8)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _is_factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = vr[..., :, None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], eps
+                )
+                upd = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(upd * upd) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -lr * (upd + weight_decay * p.astype(jnp.float32))
+            return upd, new_s
+
+        flat, tdef = jax.tree.flatten(params)
+        gs = tdef.flatten_up_to(grads)
+        ss = tdef.flatten_up_to(state)
+        out = [one(g, s, p) for g, s, p in zip(gs, ss, flat)]
+        return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+    def state_spec(spec_tree):
+        def one(s: ParamSpec):
+            if _is_factored(s.shape):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], init="zeros", dtype="float32"),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:],
+                                    init="zeros", dtype="float32"),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, init="zeros", dtype="float32")}
+
+        return jax.tree.map(one, spec_tree, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+    return Optimizer(init=init, update=update, state_spec=state_spec)

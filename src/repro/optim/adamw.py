@@ -1,0 +1,59 @@
+"""AdamW with fp32 moments (params may be bf16); decoupled weight decay."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from ..models.spec import ParamSpec
+from .base import Optimizer
+
+__all__ = ["adamw"]
+
+
+def adamw(
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            upd = -lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return upd, m, v
+
+        flat, tdef = jax.tree.flatten(params)
+        gs = tdef.flatten_up_to(grads)
+        ms = tdef.flatten_up_to(state["m"])
+        vs = tdef.flatten_up_to(state["v"])
+        out = [one(g, m, v, p) for g, m, v, p in zip(gs, ms, vs, flat)]
+        upds = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return upds, {"m": new_m, "v": new_v}
+
+    def state_spec(spec_tree):
+        f32 = lambda s: replace(s, init="zeros", dtype="float32")
+        return {
+            "m": jax.tree.map(f32, spec_tree, is_leaf=lambda s: isinstance(s, ParamSpec)),
+            "v": jax.tree.map(f32, spec_tree, is_leaf=lambda s: isinstance(s, ParamSpec)),
+        }
+
+    return Optimizer(init=init, update=update, state_spec=state_spec)

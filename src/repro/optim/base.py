@@ -1,0 +1,31 @@
+"""Optimizer interface: pure functions over pytrees + state-spec derivation."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.spec import ParamSpec
+
+__all__ = ["Optimizer", "apply_updates"]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step) -> (updates, state).
+
+    ``updates`` are deltas to *add* to params.  ``state_spec(param_spec_tree)``
+    mirrors the state tree with ParamSpec leaves so shardings/abstract values can
+    be derived without allocating (dry-run path).
+    """
+
+    init: Callable
+    update: Callable
+    state_spec: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

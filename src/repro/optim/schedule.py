@@ -1,0 +1,25 @@
+"""LR schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(
+    peak_lr: float,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,3 @@
+from .loop import TrainLoopConfig, train_loop
+
+__all__ = ["TrainLoopConfig", "train_loop"]

@@ -1,0 +1,51 @@
+"""Application substrate: ECG / MNIST / GAUSS / FFN behavioral metrics."""
+
+import numpy as np
+import pytest
+
+from repro.apps import APPLICATIONS
+from repro.core.dataset import gen_random
+from repro.core.operator_model import accurate_config, spec_for
+
+
+@pytest.mark.parametrize("name", sorted(APPLICATIONS))
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_accurate_operator_is_the_reference(name, n_bits):
+    """The accurate config reproduces the reference pipeline exactly, so its
+    BEHAV penalty must be the per-app floor (0 for error-vs-accurate apps)."""
+    spec = spec_for(n_bits)
+    app = APPLICATIONS[name]()
+    acc = app.behav(spec, accurate_config(spec)[None])[0]
+    if name == "mnist":
+        # classification error vs true labels: floor is the int8-accurate error
+        assert acc < 15.0
+    else:
+        assert acc == 0.0
+
+
+@pytest.mark.parametrize("name", sorted(APPLICATIONS))
+def test_destroying_the_operator_destroys_behaviour(name):
+    spec = spec_for(8)
+    app = APPLICATIONS[name]()
+    zero = app.behav(spec, np.zeros((1, spec.n_luts), np.uint8))[0]
+    acc = app.behav(spec, accurate_config(spec)[None])[0]
+    assert zero > acc
+
+
+@pytest.mark.parametrize("name", sorted(APPLICATIONS))
+def test_behav_batch_consistency(name):
+    spec = spec_for(4)
+    app = APPLICATIONS[name]()
+    cfgs = gen_random(spec, 6, seed=3)
+    batch = app.behav(spec, cfgs)
+    singles = np.array([app.behav(spec, c[None])[0] for c in cfgs])
+    np.testing.assert_allclose(batch, singles)
+
+
+def test_characterize_fn_interface():
+    spec = spec_for(4)
+    app = APPLICATIONS["gauss"]()
+    fn = app.characterize_fn(spec)
+    out = fn(gen_random(spec, 4, seed=1))
+    assert out.shape == (4, 2)
+    assert np.isfinite(out).all()

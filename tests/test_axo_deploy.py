@@ -1,0 +1,81 @@
+"""AxO deployment: rank-R factorization quality and axo_linear semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.axo import AxOOperator, axo_linear, quantize_tensor
+from repro.core.operator_model import accurate_config, spec_for
+
+RNG = np.random.default_rng(0)
+
+
+def _random_config(seed=0):
+    spec = spec_for(8)
+    return np.random.default_rng(seed).integers(0, 2, spec.n_luts).astype(np.uint8)
+
+
+def test_accurate_operator_has_zero_error_tables():
+    spec = spec_for(8)
+    op = AxOOperator.from_config(accurate_config(spec), rank=4)
+    b = op.rank_behav()
+    assert b["MAX_ABS_ERR"] < 1e-6
+    # axo_linear == plain quantized matmul for the accurate operator
+    x = jnp.asarray(RNG.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((16, 4)), jnp.float32)
+    y = axo_linear(x, w, op)
+    xq, sx = quantize_tensor(x)
+    wq, sw = quantize_tensor(w)
+    half = 128
+    xs = jnp.where(xq >= half, xq - 256, xq).astype(jnp.float32)
+    ws = jnp.where(wq >= half, wq - 256, wq).astype(jnp.float32)
+    ref = (xs @ ws) * (sx * sw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_rank_behav_improves_with_rank():
+    cfg = _random_config(1)
+    errs = [AxOOperator.from_config(cfg, rank=r).rank_behav()["AVG_ABS_ERR"]
+            for r in (1, 4, 16, 64)]
+    # non-increasing (ties possible once R exceeds the error table's true rank)
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo <= hi * (1 + 1e-9)
+    assert errs[-1] < 0.05 * (errs[0] + 1e-9)
+
+
+def test_axo_linear_converges_to_true_operator_semantics():
+    """With growing rank, axo_linear approaches the bit-exact table matmul."""
+    from repro.kernels.ref import ref_axo_matmul_exact
+
+    cfg = _random_config(2)
+    x = jnp.asarray(RNG.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((32, 8)), jnp.float32)
+    rel = []
+    for r in (1, 8, 32):
+        op = AxOOperator.from_config(cfg, rank=r)
+        xq, sx = quantize_tensor(x)
+        wq, sw = quantize_tensor(w)
+        true = ref_axo_matmul_exact(xq, wq, jnp.asarray(op.table)).astype(
+            jnp.float32) * (sx * sw)
+        y = axo_linear(x, w, op)
+        rel.append(float(jnp.linalg.norm(y - true) / jnp.linalg.norm(true)))
+    assert rel == sorted(rel, reverse=True)
+    assert rel[-1] < 0.02
+
+
+def test_axo_linear_uses_kernel_on_aligned_shapes():
+    cfg = _random_config(3)
+    op = AxOOperator.from_config(cfg, rank=4)
+    x = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
+    y_kernel = axo_linear(x, w, op, use_kernel=True)
+    y_ref = axo_linear(x, w, op, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_axo_linear_batched_shape():
+    op = AxOOperator.from_config(_random_config(4), rank=2)
+    x = jnp.asarray(RNG.standard_normal((2, 5, 16)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((16, 6)), jnp.float32)
+    assert axo_linear(x, w, op).shape == (2, 5, 6)

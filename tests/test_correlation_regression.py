@@ -1,0 +1,78 @@
+"""Correlation analysis (paper Alg. 1) and polynomial regression."""
+
+import numpy as np
+
+from repro.core.correlation import (
+    bivariate_correlation,
+    multivariate_correlation,
+    rank_quadratic_terms,
+)
+from repro.core.regression import MinMaxScaler, fit_poly, r2_score
+
+
+def test_bivariate_matches_numpy_corrcoef():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2, (200, 6)).astype(float)
+    y = X @ rng.standard_normal(6) + 0.1 * rng.standard_normal(200)
+    r = bivariate_correlation(X, y)
+    for j in range(6):
+        np.testing.assert_allclose(r[j], np.corrcoef(X[:, j], y)[0, 1], atol=1e-12)
+
+
+def test_multivariate_is_sqrt_r2_of_pair_regression():
+    rng = np.random.default_rng(1)
+    X = rng.integers(0, 2, (300, 5)).astype(float)
+    y = 2 * X[:, 0] - 3 * X[:, 3] + 0.05 * rng.standard_normal(300)
+    m = multivariate_correlation(X, y)
+    # pair (0, 3) explains nearly everything
+    assert m[0, 3] > 0.99
+    # vs a weak pair
+    assert m[1, 2] < m[0, 3]
+    # symmetric with |bivariate| on the diagonal
+    np.testing.assert_allclose(m, m.T, atol=1e-12)
+    np.testing.assert_allclose(np.diag(m), np.abs(bivariate_correlation(X, y)), atol=1e-9)
+
+
+def test_rank_quadratic_terms_orders_by_multivariate_r():
+    rng = np.random.default_rng(2)
+    X = rng.integers(0, 2, (300, 5)).astype(float)
+    y = 4 * X[:, 1] * X[:, 4] + 0.1 * rng.standard_normal(300)
+    ranked = rank_quadratic_terms(X, y)
+    assert ranked[0] == (1, 4)
+    assert len(ranked) == 10  # C(5,2)
+
+
+def test_fit_poly_recovers_exact_quadratic():
+    rng = np.random.default_rng(3)
+    X = rng.integers(0, 2, (400, 6)).astype(float)
+    y = 1.5 + X[:, 0] - 2 * X[:, 2] + 3 * X[:, 1] * X[:, 5]
+    model = fit_poly(X, y, quad_pairs=[(1, 5)], alpha=1e-10)
+    pred = model.predict(X)
+    assert r2_score(y, pred) > 0.999999
+
+
+def test_more_correlated_quads_fit_faster():
+    """Paper Fig. 2: adding correlation-ranked quadratic terms raises R^2
+    faster than adding them in reverse order."""
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 2, (400, 8)).astype(float)
+    y = (
+        2 * X[:, 0] * X[:, 1] + 1.2 * X[:, 2] * X[:, 3] + X[:, 4]
+        + 0.05 * rng.standard_normal(400)
+    )
+    ranked = rank_quadratic_terms(X, y)
+    fwd = [r2_score(y, fit_poly(X, y, quad_pairs=ranked[:k]).predict(X))
+           for k in (1, 2, 4)]
+    rev = [r2_score(y, fit_poly(X, y, quad_pairs=ranked[::-1][:k]).predict(X))
+           for k in (1, 2, 4)]
+    assert fwd[0] > rev[0]
+    assert fwd[1] > rev[1]
+
+
+def test_minmax_scaler_roundtrip():
+    rng = np.random.default_rng(5)
+    y = rng.standard_normal(100) * 37 + 11
+    sc = MinMaxScaler.fit(y)
+    z = sc.transform(y)
+    assert z.min() >= -1e-12 and z.max() <= 1 + 1e-12
+    np.testing.assert_allclose(sc.inverse(z), y, atol=1e-9)

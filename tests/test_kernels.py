@@ -1,0 +1,157 @@
+"""Per-kernel parity vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps as required for each Pallas kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operator_model import error_tables, exact_product_table, spec_for
+from repro.kernels import axo_matmul, flash_attention, ssd_scan
+from repro.kernels.ref import (
+    ref_axo_matmul_exact,
+    ref_axo_matmul_lowrank,
+    ref_flash_attention,
+    ref_ssd_scan,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _factors(n_bits: int, rank: int, seed: int = 0):
+    spec = spec_for(n_bits)
+    rng = np.random.default_rng(seed)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    err = error_tables(spec, cfg[None])[0].astype(np.float64)
+    u, s, vt = np.linalg.svd(err)
+    f = (u[:, :rank] * s[:rank]).astype(np.float32)
+    g = vt[:rank].T.astype(np.float32)
+    table = (exact_product_table(n_bits).astype(np.int64) + err.astype(np.int64))
+    return spec, f, g, table.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# axo_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rank", [1, 2, 8])
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 128, 384)])
+def test_axo_matmul_kernel_matches_ref(rank, mkn):
+    m, k, n = mkn
+    spec, f, g, _ = _factors(8, rank)
+    a = RNG.integers(0, 256, (m, k))
+    b = RNG.integers(0, 256, (k, n))
+    sv = jnp.asarray(spec.operand_values, jnp.float32)
+    out = axo_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(f), jnp.asarray(g), sv)
+    ref = ref_axo_matmul_lowrank(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(f), jnp.asarray(g), sv)
+    scale = float(jnp.max(jnp.abs(ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5 * scale, rtol=1e-5)
+
+
+def test_axo_matmul_block_shapes_are_equivalent():
+    spec, f, g, _ = _factors(8, 4)
+    a = RNG.integers(0, 256, (256, 256))
+    b = RNG.integers(0, 256, (256, 256))
+    sv = jnp.asarray(spec.operand_values, jnp.float32)
+    outs = [
+        np.asarray(axo_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(f),
+                              jnp.asarray(g), sv, bm=bm, bn=bn, bk=bk))
+        for bm, bn, bk in [(128, 128, 128), (256, 128, 128), (128, 256, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-2)
+
+
+def test_lowrank_error_converges_to_exact_table():
+    """Rank sweep: residual vs the bit-exact table path must shrink with R."""
+    a = RNG.integers(0, 256, (64, 64))
+    b = RNG.integers(0, 256, (64, 64))
+    errs = []
+    for rank in (1, 4, 16, 64):
+        spec, f, g, table = _factors(8, rank, seed=1)
+        sv = jnp.asarray(spec.operand_values, jnp.float32)
+        low = ref_axo_matmul_lowrank(jnp.asarray(a), jnp.asarray(b),
+                                     jnp.asarray(f), jnp.asarray(g), sv)
+        exact = ref_axo_matmul_exact(jnp.asarray(a), jnp.asarray(b),
+                                     jnp.asarray(table)).astype(jnp.float32)
+        errs.append(float(jnp.linalg.norm(low - exact) / jnp.linalg.norm(exact)))
+    assert errs[-1] < 1e-4
+    assert errs == sorted(errs, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 4, 4, 256, 64),     # MHA
+    (1, 8, 2, 384, 128),    # GQA 4:1
+    (2, 4, 1, 128, 64),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(shape, causal, dtype):
+    b, h, g, s, hd = shape
+    q = jnp.asarray(RNG.standard_normal((b, h, s, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, g, s, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, g, s, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = ref_flash_attention(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_shape_invariance():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    a = flash_attention(q, k, v, bq=128, bk=128)
+    b = flash_attention(q, k, v, bq=64, bk=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 256, 4, 1, 16, 32, 64),
+    (1, 128, 8, 2, 8, 16, 32),
+    (1, 64, 4, 4, 8, 8, 64),    # chunk == S (single chunk)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_sequential_ref(shape, dtype):
+    b, s, h, g, p, n, chunk = shape
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((b, s, g, n)), dtype)
+    cm = jnp.asarray(RNG.standard_normal((b, s, g, n)), dtype)
+    y, hf = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    yr, hr = ref_ssd_scan(x, dt, a, bm, cm)
+    tol = 2e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=tol, rtol=tol)
+
+
+def test_ssd_scan_matches_xla_chunked_path():
+    """Kernel vs the model's XLA ssd_chunked (the execution path)."""
+    from repro.models.ssm import ssd_chunked
+
+    b, s, h, g, p, n = 2, 128, 4, 1, 16, 32
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(RNG.standard_normal((b, s, g, n)), jnp.float32)
+    y1, h1 = ssd_scan(x, dt, a, bm, cm, chunk=32)
+    y2, h2 = ssd_chunked(x, dt, a, bm, cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)

@@ -1,0 +1,75 @@
+"""BEHAV metrics + simulated-synthesis PPA model invariants."""
+
+import numpy as np
+
+from repro.core.dataset import build_training_dataset, gen_pattern, gen_random
+from repro.core.metrics import behav_metrics
+from repro.core.operator_model import accurate_config, spec_for
+from repro.core.ppa import merge_tree_luts, ppa_metrics
+
+
+def test_accurate_config_has_zero_behav_error():
+    spec = spec_for(4)
+    m = behav_metrics(spec, accurate_config(spec)[None])
+    for k in ("AVG_ABS_ERR", "AVG_ABS_REL_ERR", "PROB_ERR", "MAX_ABS_ERR", "MSE"):
+        assert m[k][0] == 0.0, k
+
+
+def test_more_removal_is_worse_on_average():
+    spec = spec_for(4)
+    rng = np.random.default_rng(0)
+    light = rng.integers(0, 2, (64, spec.n_luts)).astype(np.uint8) | (
+        rng.random((64, spec.n_luts)) < 0.8
+    ).astype(np.uint8)
+    heavy = (rng.random((64, spec.n_luts)) < 0.2).astype(np.uint8)
+    m_light = behav_metrics(spec, light)["AVG_ABS_ERR"].mean()
+    m_heavy = behav_metrics(spec, heavy)["AVG_ABS_ERR"].mean()
+    assert m_heavy > m_light
+
+
+def test_ppa_metrics_structure():
+    spec = spec_for(4)
+    rng = np.random.default_rng(1)
+    cfgs = rng.integers(0, 2, (32, spec.n_luts)).astype(np.uint8)
+    m = ppa_metrics(spec, cfgs)
+    assert (m["POWER"] > 0).all() and (m["CPD"] > 0).all()
+    np.testing.assert_allclose(m["PDP"], m["POWER"] * m["CPD"])
+    np.testing.assert_allclose(m["PDPLUT"], m["PDP"] * m["LUTS"])
+    merge, _, _ = merge_tree_luts(spec)
+    np.testing.assert_allclose(
+        m["LUTS"], cfgs.sum(axis=1) + spec.rows + merge
+    )
+
+
+def test_removing_luts_never_increases_lut_count_or_power():
+    spec = spec_for(4)
+    full = accurate_config(spec)[None]
+    none = np.zeros_like(full)
+    m_full = ppa_metrics(spec, full)
+    m_none = ppa_metrics(spec, none)
+    assert m_none["LUTS"][0] < m_full["LUTS"][0]
+    assert m_none["POWER"][0] < m_full["POWER"][0]
+    assert m_none["CPD"][0] <= m_full["CPD"][0]
+
+
+def test_pattern_dataset_widens_ppa_range():
+    """The paper's Fig. 7 claim: PATTERN sampling widens the metric range."""
+    spec = spec_for(8)
+    rand = gen_random(spec, 150, seed=0)
+    pat = gen_pattern(spec)
+    m_rand = ppa_metrics(spec, rand)["PDPLUT"]
+    m_pat = ppa_metrics(spec, pat)["PDPLUT"]
+    assert m_pat.min() < m_rand.min()
+    span_pat = m_pat.max() - m_pat.min()
+    span_rand = m_rand.max() - m_rand.min()
+    assert span_pat > span_rand
+
+
+def test_dataset_build_dedup_and_cache(tmp_path):
+    spec = spec_for(4)
+    path = str(tmp_path / "ds.npz")
+    ds = build_training_dataset(spec, n_random=100, seed=0, cache_path=path)
+    ds2 = build_training_dataset(spec, n_random=100, seed=0, cache_path=path)
+    assert len(ds) == len(ds2)
+    np.testing.assert_array_equal(ds.configs, ds2.configs)
+    assert len(np.unique(ds.configs, axis=0)) == len(ds)

@@ -1,0 +1,84 @@
+"""MILP/MIQCP solver correctness (enumeration is the exact reference)."""
+
+import numpy as np
+import pytest
+
+from repro.core.correlation import rank_quadratic_terms
+from repro.core.dataset import build_training_dataset
+from repro.core.miqcp import (
+    MapProblem,
+    QuadExpr,
+    build_problems,
+    solve_bnb,
+    solve_enumerate,
+    solve_tabu,
+)
+from repro.core.operator_model import spec_for
+from repro.core.regression import fit_poly
+
+
+def _problems(n_quad: int, const_sf: float, wt):
+    spec = spec_for(4)
+    ds = build_training_dataset(spec, n_random=200, seed=0)
+    X = ds.configs.astype(float)
+    yb = ds.metrics["AVG_ABS_REL_ERR"]
+    yp = ds.metrics["PDPLUT"]
+    rb = rank_quadratic_terms(X, yb)[:n_quad]
+    rp = rank_quadratic_terms(X, yp)[:n_quad]
+    bm = fit_poly(X, yb, quad_pairs=rb)
+    pm = fit_poly(X, yp, quad_pairs=rp)
+    return build_problems(
+        bm, pm, float(yb.max()), float(yp.max()), const_sf,
+        wt_grid=np.asarray(wt), n_quad=n_quad,
+    )
+
+
+def test_quadexpr_value_and_flip_deltas():
+    rng = np.random.default_rng(0)
+    L = 8
+    expr = QuadExpr(
+        const=rng.standard_normal(),
+        lin=rng.standard_normal(L),
+        quad=np.triu(rng.standard_normal((L, L)), k=1),
+    )
+    l = rng.integers(0, 2, L).astype(float)
+    deltas = expr.flip_deltas(l)
+    for k in range(L):
+        l2 = l.copy()
+        l2[k] = 1 - l2[k]
+        np.testing.assert_allclose(deltas[k], expr.value(l2) - expr.value(l), atol=1e-9)
+
+
+@pytest.mark.parametrize("n_quad", [0, 4])
+@pytest.mark.parametrize("const_sf", [0.5, 1.0])
+def test_tabu_and_bnb_match_enumeration_on_4x4(n_quad, const_sf):
+    for prob in _problems(n_quad, const_sf, [0.0, 0.5, 1.0]):
+        exact = solve_enumerate(prob)
+        tabu = solve_tabu(prob, seed=0)
+        bnb = solve_bnb(prob, node_budget=500_000)
+        if exact.best is None:
+            assert tabu.best is None or prob.feasible(tabu.best[None])[0]
+            continue
+        # bnb is exact within budget on these small instances
+        np.testing.assert_allclose(bnb.best_obj, exact.best_obj, rtol=1e-9)
+        # tabu is a heuristic: must be feasible and close
+        assert tabu.best is not None
+        assert prob.feasible(tabu.best[None])[0]
+        assert tabu.best_obj >= exact.best_obj - 1e-9
+        assert tabu.best_obj <= exact.best_obj + 0.15 * (abs(exact.best_obj) + 1e-3)
+
+
+def test_solution_pools_are_feasible_and_unique():
+    for prob in _problems(4, 1.0, [0.25, 0.75]):
+        res = solve_enumerate(prob, pool_size=8)
+        if len(res.pool):
+            assert prob.feasible(res.pool).all()
+            assert len(np.unique(res.pool, axis=0)) == len(res.pool)
+
+
+def test_tight_constraints_reduce_feasible_pool():
+    loose = _problems(0, 1.5, [0.5])[0]
+    tight = _problems(0, 0.2, [0.5])[0]
+    n_loose = len(solve_enumerate(loose, pool_size=512).pool)
+    n_tight = len(solve_enumerate(tight, pool_size=512).pool)
+    assert n_tight <= n_loose

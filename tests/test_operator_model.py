@@ -1,0 +1,94 @@
+"""Operator-model correctness: exactness, oracle parity, representations."""
+
+import numpy as np
+import pytest
+
+from repro.core.operator_model import (
+    accurate_config,
+    config_to_masks,
+    error_tables,
+    exact_product_table,
+    masks_to_config,
+    product_tables,
+    simulate_product,
+    spec_for,
+)
+
+
+@pytest.mark.parametrize("n_bits,expected_l", [(4, 10), (8, 36)])
+def test_removable_lut_counts_match_paper(n_bits, expected_l):
+    assert spec_for(n_bits).n_luts == expected_l
+
+
+@pytest.mark.parametrize("n_bits", [2, 4, 8])
+def test_accurate_config_is_exact(n_bits):
+    spec = spec_for(n_bits)
+    table = product_tables(spec, accurate_config(spec)[None])[0]
+    np.testing.assert_array_equal(table, exact_product_table(n_bits))
+
+
+def test_all_zero_config_keeps_only_sign_columns():
+    """Removing every removable LUT leaves only the always-accurate top (sign)
+    column of each row -- the outputs collapse onto that column's weight."""
+    spec = spec_for(4)
+    table = product_tables(spec, np.zeros((1, spec.n_luts), np.uint8))[0]
+    assert not np.array_equal(table, exact_product_table(4))
+    w = spec.width
+    # every surviving contribution is a multiple of the sign-column weight
+    assert (table % (1 << (w - 1)) == 0).all()
+    # and the oracle agrees
+    cfg = np.zeros(spec.n_luts, np.uint8)
+    for a in (-8, -3, 0, 5, 7):
+        for b in (-8, -1, 0, 4, 7):
+            assert table[a & 15, b & 15] == simulate_product(spec, a, b, cfg)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_table_matches_bit_level_oracle_4x4(seed):
+    spec = spec_for(4)
+    rng = np.random.default_rng(seed)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    table = product_tables(spec, cfg[None])[0]
+    for a in range(-8, 8):
+        for b in range(-8, 8):
+            assert table[a & 15, b & 15] == simulate_product(spec, a, b, cfg)
+
+
+def test_table_matches_oracle_8x8_sampled():
+    spec = spec_for(8)
+    rng = np.random.default_rng(0)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    table = product_tables(spec, cfg[None])[0]
+    for _ in range(50):
+        a = int(rng.integers(-128, 128))
+        b = int(rng.integers(-128, 128))
+        assert table[a & 255, b & 255] == simulate_product(spec, a, b, cfg)
+
+
+def test_masks_roundtrip():
+    spec = spec_for(8)
+    rng = np.random.default_rng(1)
+    cfgs = rng.integers(0, 2, (32, spec.n_luts)).astype(np.uint8)
+    masks = config_to_masks(spec, cfgs)
+    np.testing.assert_array_equal(masks_to_config(spec, masks), cfgs)
+
+
+def test_error_tables_are_table_minus_exact():
+    spec = spec_for(4)
+    rng = np.random.default_rng(2)
+    cfgs = rng.integers(0, 2, (8, spec.n_luts)).astype(np.uint8)
+    err = error_tables(spec, cfgs)
+    tabs = product_tables(spec, cfgs)
+    np.testing.assert_array_equal(
+        err, tabs.astype(np.int64) - exact_product_table(4)[None]
+    )
+
+
+def test_batch_table_consistency():
+    """Batched characterization equals per-config characterization."""
+    spec = spec_for(4)
+    rng = np.random.default_rng(3)
+    cfgs = rng.integers(0, 2, (16, spec.n_luts)).astype(np.uint8)
+    batch = product_tables(spec, cfgs)
+    for i in range(len(cfgs)):
+        np.testing.assert_array_equal(batch[i], product_tables(spec, cfgs[i][None])[0])

@@ -1,0 +1,98 @@
+"""Optimizers, schedules, clipping, int8 compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    compress_int8,
+    cosine_schedule,
+    decompress_int8,
+    global_norm,
+)
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt(lambda step: 0.1, weight_decay=0.0)
+    target = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                               jnp.float32), "b": jnp.ones((8,), jnp.float32)}
+    params = jax.tree.map(jnp.zeros_like, target)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, t):
+        loss, g = jax.value_and_grad(
+            lambda p: sum(jnp.sum((a - b) ** 2) for a, b in
+                          zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+        )(params)
+        upd, state = opt.update(g, state, params, t)
+        return apply_updates(params, upd), state, loss
+
+    losses = []
+    for t in range(60):
+        params, state, loss = step(params, state, jnp.int32(t))
+        losses.append(float(loss))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_state_spec_mirrors_state_tree(make_opt):
+    from repro.models.spec import ParamSpec, abstract_params
+
+    opt = make_opt(lambda s: 1e-3)
+    spec_tree = {"a": ParamSpec((4, 6), ("embed", "mlp")),
+                 "b": ParamSpec((5,), ("embed",))}
+    params = {"a": jnp.zeros((4, 6)), "b": jnp.zeros((5,))}
+    state = opt.init(params)
+    abs_state = abstract_params(opt.state_spec(spec_tree))
+    assert jax.tree.structure(state) == jax.tree.structure(abs_state)
+    for real, abst in zip(jax.tree.leaves(state), jax.tree.leaves(abs_state)):
+        assert real.shape == abst.shape and real.dtype == abst.dtype
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(lr(jnp.int32(0))) < float(lr(jnp.int32(9)))
+    np.testing.assert_allclose(float(lr(jnp.int32(10))), 1e-3, rtol=1e-2)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(90 + 160), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    # below the threshold: untouched
+    same, _ = clip_by_global_norm(tree, 1e6)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0)
+
+
+def test_compress_int8_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 5, jnp.float32)
+    q, scale, err = compress_int8(x)
+    y = decompress_int8(q, scale)
+    assert float(jnp.max(jnp.abs(x - y))) <= float(scale) / 2 + 1e-6
+    np.testing.assert_allclose(np.asarray(x - y), np.asarray(err), atol=1e-6)
+
+
+def test_error_feedback_removes_bias():
+    """Accumulating with error feedback: the summed quantized stream converges
+    to the true sum (bias cancels), unlike naive requantization."""
+    rng = np.random.default_rng(1)
+    xs = [jnp.asarray(rng.standard_normal(256), jnp.float32) for _ in range(50)]
+    err = jnp.zeros(256)
+    total = jnp.zeros(256)
+    for x in xs:
+        q, s, err = compress_int8(x, err)
+        total = total + decompress_int8(q, s)
+    true = sum(xs)
+    resid = float(jnp.max(jnp.abs(total - true)))
+    # the residual is bounded by the final error-feedback buffer (one quantum)
+    assert resid <= float(jnp.max(jnp.abs(err))) + 1e-5

@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.apps.base import quantize_int8
+from repro.core.moo import hypervolume_2d, pareto_mask
+from repro.core.operator_model import (
+    config_to_masks,
+    masks_to_config,
+    product_tables,
+    simulate_product,
+    spec_for,
+)
+from repro.core.ppa import ppa_metrics
+
+SPEC4 = spec_for(4)
+
+
+@given(st.integers(0, 2**10 - 1), st.integers(-8, 7), st.integers(-8, 7))
+@settings(max_examples=60, deadline=None)
+def test_table_equals_bit_oracle_everywhere(cfg_code, a, b):
+    cfg = np.array([(cfg_code >> i) & 1 for i in range(10)], np.uint8)
+    table = product_tables(SPEC4, cfg[None])[0]
+    assert table[a & 15, b & 15] == simulate_product(SPEC4, a, b, cfg)
+
+
+@given(st.lists(st.integers(0, 2**10 - 1), min_size=1, max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_masks_roundtrip_prop(codes):
+    cfgs = np.array(
+        [[(c >> i) & 1 for i in range(10)] for c in codes], np.uint8
+    )
+    np.testing.assert_array_equal(
+        masks_to_config(SPEC4, config_to_masks(SPEC4, cfgs)), cfgs
+    )
+
+
+@given(st.integers(0, 2**10 - 1))
+@settings(max_examples=40, deadline=None)
+def test_ppa_monotone_in_lut_superset(cfg_code):
+    """Adding a LUT back never reduces LUT count and never reduces power."""
+    cfg = np.array([(cfg_code >> i) & 1 for i in range(10)], np.uint8)
+    if cfg.all():
+        return
+    j = int(np.argmin(cfg))
+    sup = cfg.copy()
+    sup[j] = 1
+    m = ppa_metrics(SPEC4, np.stack([cfg, sup]))
+    assert m["LUTS"][1] == m["LUTS"][0] + 1
+    assert m["POWER"][1] >= m["POWER"][0] - 1e-9
+
+
+@given(
+    st.lists(
+        st.tuples(st.floats(0, 1, allow_nan=False), st.floats(0, 1, allow_nan=False)),
+        min_size=1, max_size=30,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_pareto_mask_invariants(points):
+    pts = np.array(points, np.float64)
+    mask = pareto_mask(pts)
+    assert mask.any()  # at least one non-dominated point
+    kept = pts[mask]
+    # no kept point dominates another kept point (strictly)
+    for i in range(len(kept)):
+        for j in range(len(kept)):
+            if i != j:
+                assert not (np.all(kept[j] <= kept[i]) and np.any(kept[j] < kept[i]))
+
+
+@given(
+    st.lists(
+        st.tuples(st.floats(0, 1, allow_nan=False), st.floats(0, 1, allow_nan=False)),
+        min_size=1, max_size=20,
+    ),
+    st.tuples(st.floats(0, 1, allow_nan=False), st.floats(0, 1, allow_nan=False)),
+)
+@settings(max_examples=50, deadline=None)
+def test_hypervolume_bounds_and_pareto_invariance(points, extra):
+    pts = np.array(points, np.float64)
+    ref = np.array([1.0, 1.0])
+    hv = hypervolume_2d(pts, ref)
+    assert 0.0 <= hv <= 1.0 + 1e-12
+    # adding any point never decreases HV
+    hv2 = hypervolume_2d(np.vstack([pts, np.array(extra)]), ref)
+    assert hv2 >= hv - 1e-12
+    # dominated points contribute nothing: HV of the Pareto subset is equal
+    hv3 = hypervolume_2d(pts[pareto_mask(pts)], ref)
+    assert abs(hv3 - hv) < 1e-12
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=100),
+       st.sampled_from([4, 8]))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_bound(values, n_bits):
+    x = np.array(values, np.float64)
+    codes, scale = quantize_int8(x, n_bits=n_bits)
+    half = 1 << (n_bits - 1)
+    signed = np.where(codes >= half, codes - (1 << n_bits), codes)
+    err = np.abs(x - scale * signed)
+    assert (err <= scale / 2 + 1e-9).all()
+    assert (codes >= 0).all() and (codes < (1 << n_bits)).all()

@@ -1,0 +1,121 @@
+"""End-to-end system behaviour: the paper's DSE feeding the framework's
+serving arithmetic, plus a short fault-tolerant LM training run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import TransformerFFN
+from repro.axo import AxOOperator, axo_linear
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_arch
+from repro.core.dataset import build_training_dataset
+from repro.core.dse import DSESettings, hv_reference, map_solution_pool, run_dse
+from repro.core.operator_model import spec_for
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.model import model_spec
+from repro.models.spec import init_params
+from repro.models.sharding import BASE_RULES
+from repro.optim import cosine_schedule, make_optimizer
+from repro.train import TrainLoopConfig, train_loop
+
+
+def test_dse_to_deployment_pipeline():
+    """Paper loop end-to-end: characterize -> MaP+GA DSE -> pick a Pareto
+    config -> deploy it as serving arithmetic via rank-R axo_linear."""
+    spec = spec_for(4)
+    ds = build_training_dataset(spec, n_random=200, seed=0)
+    st = DSESettings(const_sf=1.0, pop_size=16, n_gen=8, n_quad_grid=(0, 4),
+                     pool_size=4, seed=0)
+    pool = map_solution_pool(spec, ds, st)
+    res = run_dse(spec, ds, "map+ga", settings=st, map_pool=pool)
+    assert len(res.vpf_configs) > 0
+
+    # deploy the lowest-BEHAV front point inside an FFN block
+    best = res.vpf_configs[int(np.argmin(res.vpf_objs[:, 0]))]
+    op = AxOOperator.from_config(best, rank=8, n_bits=4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((16, 32)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((32, 16)) * 0.3, jnp.float32)
+    h = jax.nn.gelu(axo_linear(x, w1, op))
+    y = axo_linear(h, w2, op)
+
+    # Correctness contract: the deployed rank-R path tracks the BIT-EXACT
+    # approximate-operator pipeline (same quantization, table semantics).
+    # Deviation from the float pipeline is the *operator's* BEHAV cost the
+    # DSE deliberately traded -- it is characterized, not asserted small.
+    from repro.axo import quantize_tensor
+    from repro.kernels.ref import ref_axo_matmul_exact
+
+    def table_layer(inp, w):
+        iq, si = quantize_tensor(inp, op.n_bits)
+        wq, sw = quantize_tensor(w, op.n_bits)
+        return ref_axo_matmul_exact(iq, wq, jnp.asarray(op.table)).astype(
+            jnp.float32) * (si * sw)
+
+    h_t = jax.nn.gelu(table_layer(x, w1))
+    y_t = table_layer(h_t, w2)
+    rel_exact = float(jnp.linalg.norm(y - y_t)
+                      / max(float(jnp.linalg.norm(y_t)), 1e-9))
+    assert rel_exact < 0.15, rel_exact  # rank-8 of a 16x16 error table ~ exact
+
+    ref = jax.nn.gelu(x @ w1) @ w2
+    rel_float = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert np.isfinite(rel_float)  # characterized, not bounded: the DSE's trade
+
+    # the FFN application's BEHAV agrees in direction: this config scores
+    # better than the all-zeros (destroyed) operator
+    app = TransformerFFN()
+    b = app.behav(spec, np.stack([best, np.ones_like(best)]))
+    # the accurate operator is the app-level floor; the selected design's
+    # app-level penalty is finite and characterized (the relative-L2 metric
+    # saturates near 100 for aggressive approximations, so no ordering vs the
+    # destroyed operator is implied)
+    assert b[1] == 0.0
+    assert np.isfinite(b[0]) and b[0] >= b[1]
+
+
+def test_fault_tolerant_lm_training(tmp_path):
+    """A real (reduced) LM trained through the fault-tolerant loop with an
+    injected failure finishes and matches the clean run's loss history."""
+    cfg = get_arch("granite-3-2b").reduced()
+    shape = ShapeConfig("t", 32, 2, "train")
+    data = SyntheticLM(cfg, shape, seed=0)
+    opt = make_optimizer("adamw", cosine_schedule(1e-3))
+    step_jit = jax.jit(make_train_step(cfg, BASE_RULES, opt))
+
+    def init_state():
+        params = init_params(model_spec(cfg), seed=0, dtype=jnp.float32)
+        return params, opt.init(params)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+
+    def step_fn(params, opt_state, step, batch):
+        return step_jit(params, opt_state, jnp.int32(int(step)), batch)
+
+    clean = train_loop(
+        step_fn, init_state, batch_fn,
+        TrainLoopConfig(total_steps=8, ckpt_every=4,
+                        ckpt_dir=str(tmp_path / "clean"), async_ckpt=False),
+    )
+
+    fired = {"n": 0}
+
+    def fault(step):
+        if step == 5 and fired["n"] == 0:
+            fired["n"] += 1
+            raise RuntimeError("injected failure")
+
+    faulty = train_loop(
+        step_fn, init_state, batch_fn,
+        TrainLoopConfig(total_steps=8, ckpt_every=4,
+                        ckpt_dir=str(tmp_path / "faulty"), async_ckpt=False),
+        fault_hook=fault,
+    )
+    assert faulty["restarts"] == 1
+    clean_losses = [l for _, l in clean["history"]]
+    faulty_losses = [l for _, l in faulty["history"]]
+    np.testing.assert_allclose(faulty_losses, clean_losses, rtol=1e-5)

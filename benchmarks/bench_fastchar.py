@@ -1,0 +1,92 @@
+"""Characterization throughput: numpy oracle vs the fastchar JAX engine.
+
+The DSE-dominating hot path is turning LUT-config batches into BEHAV metrics.
+Headline row: configs/sec at the 8-bit (L=36) operator, batch 256 -- the
+fastchar XLA path must be >= 5x the numpy ``characterize()`` baseline (it is
+~10x+ on CPU hosts; on TPU the Pallas kernel path takes over).
+
+Also reported: the one-dispatch NSGA-II surrogate evaluation vs per-model
+numpy predicts, and batched MaP enumeration scoring.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dataset import characterize, gen_random
+from repro.core.fastchar import behav_metrics_jax, compile_surrogate_batch
+from repro.core.metrics import behav_metrics
+
+from .common import BenchCtx, row
+
+
+def _best_of(fn, n: int = 3) -> float:
+    """Best-of-n wall seconds (jit paths are warmed up by the caller)."""
+    best = np.inf
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    spec = ctx.spec8
+    rows: list[dict] = []
+    d = 256
+    cfgs = gen_random(spec, d, seed=ctx.seed)
+
+    # -- headline: full characterization (BEHAV + PPA), batch 256, L=36 -------
+    characterize(spec, cfgs, backend="jax")  # compile at this shape
+    t_np = _best_of(lambda: characterize(spec, cfgs, backend="numpy"))
+    t_jx = _best_of(lambda: characterize(spec, cfgs, backend="jax"))
+    rows.append(row("fastchar.characterize_numpy", t_np * 1e6,
+                    f"{d / t_np:.0f} configs/s"))
+    rows.append(row("fastchar.characterize_jax", t_jx * 1e6,
+                    f"{d / t_jx:.0f} configs/s"))
+    rows.append(row("fastchar.characterize_speedup", 0.0, f"{t_np / t_jx:.1f}x"))
+
+    # -- BEHAV metrics only (the accelerated part) ----------------------------
+    t_np_b = _best_of(lambda: behav_metrics(spec, cfgs, backend="numpy"))
+    t_jx_b = _best_of(lambda: behav_metrics_jax(spec, cfgs, impl="xla"))
+    rows.append(row("fastchar.behav_numpy", t_np_b * 1e6, f"{d / t_np_b:.0f} configs/s"))
+    rows.append(row("fastchar.behav_jax_xla", t_jx_b * 1e6, f"{d / t_jx_b:.0f} configs/s"))
+    rows.append(row("fastchar.behav_speedup", 0.0, f"{t_np_b / t_jx_b:.1f}x"))
+
+    if not ctx.quick:
+        # interpret-mode Pallas kernel (correctness path; slow on CPU by design)
+        small = gen_random(spec, 16, seed=ctx.seed)
+        behav_metrics_jax(spec, small, impl="pallas", interpret=True)
+        t_pl = _best_of(
+            lambda: behav_metrics_jax(spec, small, impl="pallas", interpret=True), n=1
+        )
+        rows.append(row("fastchar.behav_pallas_interpret", t_pl * 1e6,
+                        f"{16 / t_pl:.0f} configs/s"))
+
+    # -- NSGA-II surrogate fitness: one jit dispatch per generation -----------
+    from repro.core.automl import fit_estimators
+
+    ds = ctx.ds4()
+    keys = ("AVG_ABS_REL_ERR", "PDPLUT")
+    ests = fit_estimators(
+        ds.configs.astype(np.float64),
+        {k: ds.metrics[k] for k in keys}, n_quad=16, seed=ctx.seed,
+    )
+    mb = float(ds.metrics[keys[0]].max())
+    mp = float(ds.metrics[keys[1]].max())
+    fn = compile_surrogate_batch(ests, keys[0], keys[1], mb, mp)
+    pop = gen_random(ctx.spec4, 256, seed=ctx.seed).astype(np.float64)
+    fn(pop)  # compile
+
+    def numpy_gen():
+        for k in keys:
+            ests[k].predict(pop)
+
+    t_sn = _best_of(numpy_gen)
+    t_sj = _best_of(lambda: fn(pop))
+    rows.append(row("fastchar.surrogate_gen_numpy", t_sn * 1e6, "pop=256"))
+    rows.append(row("fastchar.surrogate_gen_jax", t_sj * 1e6,
+                    f"{t_sn / max(t_sj, 1e-9):.1f}x"))
+    return rows

@@ -26,6 +26,7 @@ BENCHES = [
     "sota",           # Figs. 14/15
     "apps",           # Figs. 16-19
     "kernels",        # beyond-paper kernel parity
+    "fastchar",       # batched characterization engine vs numpy oracle
 ]
 
 

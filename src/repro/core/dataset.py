@@ -4,6 +4,10 @@ The paper observes that uniform random sampling of LUT configs concentrates the 
 metrics in a narrow band, and augments RANDOM sampling with PATTERN sampling --
 "moving windows of consecutive and/or alternating ones and zeros" -- to widen the
 metric distribution.  ``gen_pattern`` reproduces that scheme.
+
+``characterize`` accepts ``backend="numpy"`` (bit-exact oracle, default) or
+``"jax"`` (the batched ``repro.core.fastchar`` engine) for the BEHAV half of
+the characterization; PPA always uses the shared numpy synthesis tables.
 """
 
 from __future__ import annotations
@@ -149,10 +153,18 @@ def characterize(
     synth: SynthesisModel = DEFAULT_SYNTH,
     source: int = 0,
     batch_size: int = 256,
+    backend: str = "numpy",
 ) -> Dataset:
-    """Full characterization (exhaustive BEHAV + simulated-synthesis PPA)."""
+    """Full characterization (exhaustive BEHAV + simulated-synthesis PPA).
+
+    ``backend="jax"`` evaluates the BEHAV metrics with the batched
+    ``repro.core.fastchar`` engine (PPA stays on the cheap numpy tables); the
+    default ``"numpy"`` path is the bit-exact oracle.
+    """
     configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
-    metrics = dict(behav_metrics(spec, configs, batch_size=batch_size))
+    metrics = dict(
+        behav_metrics(spec, configs, batch_size=batch_size, backend=backend)
+    )
     metrics.update(ppa_metrics(spec, configs, synth))
     return Dataset(
         configs=configs,

@@ -50,7 +50,14 @@ CONST_SF_GRID = (0.2, 0.5, 0.8, 1.0, 1.2, 1.5)
 
 @dataclass
 class DSESettings:
-    """Knobs shared by every method (defaults sized for the 8x8 operator)."""
+    """Knobs shared by every method (defaults sized for the 8x8 operator).
+
+    ``backend`` selects the characterization/surrogate execution engine:
+    ``"numpy"`` (default, the bit-exact oracle) or ``"jax"``, which routes VPF
+    re-characterization through ``repro.core.fastchar``, compiles the NSGA-II
+    surrogate fitness into one device dispatch per generation, and batches the
+    MaP enumeration scoring on device.
+    """
 
     ppa_key: str = PPA_KEY
     behav_key: str = BEHAV_KEY
@@ -62,6 +69,7 @@ class DSESettings:
     pool_size: int = 8
     seed: int = 0
     n_estimator_quad: int = 48
+    backend: str = "numpy"
 
 
 @dataclass
@@ -98,8 +106,15 @@ def map_solution_pool(
     spec: OperatorSpec,
     train_ds: Dataset,
     settings: DSESettings,
+    backend: str | None = None,
 ) -> np.ndarray:
-    """Union MaP solution pool over the wt_B x n_quad battery (§4.3.1)."""
+    """Union MaP solution pool over the wt_B x n_quad battery (§4.3.1).
+
+    ``backend`` (default ``settings.backend``) is forwarded to the MaP solvers;
+    under ``"jax"`` the exhaustive-enumeration scoring of each problem runs as
+    one batched device dispatch (``fastchar.map_problem_values_jax``).
+    """
+    backend = settings.backend if backend is None else backend
     X = train_ds.configs.astype(np.float64)
     yb = train_ds.metrics[settings.behav_key]
     yp = train_ds.metrics[settings.ppa_key]
@@ -119,7 +134,9 @@ def map_solution_pool(
                 wt_grid=wt_grid, n_quad=n_quad,
             )
         )
-    return solve_pool(problems, seed=settings.seed, pool_size=settings.pool_size)
+    return solve_pool(
+        problems, seed=settings.seed, pool_size=settings.pool_size, backend=backend
+    )
 
 
 def _surrogate_eval(
@@ -201,10 +218,24 @@ def _default_characterize(
     spec: OperatorSpec, settings: DSESettings
 ) -> Callable[[np.ndarray], np.ndarray]:
     def fn(configs: np.ndarray) -> np.ndarray:
-        ds = characterize(spec, configs)
+        ds = characterize(spec, configs, backend=settings.backend)
         return ds.objectives(ppa_key=settings.ppa_key, behav_key=settings.behav_key)
 
     return fn
+
+
+def _surrogate_eval_viol_jax(
+    estimators: dict[str, AutoMLRegressor],
+    settings: DSESettings,
+    max_behav: float,
+    max_ppa: float,
+) -> Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]]:
+    """One jit-compiled (objectives, violation) dispatch per candidate batch."""
+    from .fastchar import compile_surrogate_batch  # lazy JAX import
+
+    return compile_surrogate_batch(
+        estimators, settings.behav_key, settings.ppa_key, max_behav, max_ppa
+    )
 
 
 def run_dse(
@@ -239,8 +270,14 @@ def run_dse(
     ref = hv_reference(train_ds, settings) if ref is None else ref
     max_behav, max_ppa = _constraint_bounds(train_ds, settings)
 
-    eval_fn = _surrogate_eval(estimators, settings)
-    viol_fn = _violation_fn(estimators, settings, max_behav, max_ppa)
+    use_jax = settings.backend == "jax"
+    if use_jax:
+        eval_viol_fn = _surrogate_eval_viol_jax(estimators, settings, max_behav, max_ppa)
+        eval_fn = viol_fn = None
+    else:
+        eval_viol_fn = None
+        eval_fn = _surrogate_eval(estimators, settings)
+        viol_fn = _violation_fn(estimators, settings, max_behav, max_ppa)
 
     if method not in ("ga", "map", "map+ga"):
         raise ValueError(f"unknown method {method!r}")
@@ -255,8 +292,11 @@ def run_dse(
         pool = map_pool
         if len(pool) == 0:
             pool = gen_random(spec, 1, seed=settings.seed)  # degenerate fallback
-        objs_est = eval_fn(pool)
-        viol = viol_fn(pool)
+        if use_jax:
+            objs_est, viol = eval_viol_fn(pool)
+        else:
+            objs_est = eval_fn(pool)
+            viol = viol_fn(pool)
         n_evals = len(pool)
         ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
     else:
@@ -270,6 +310,7 @@ def run_dse(
             initial_population=init,
             violation_fn=viol_fn,
             hv_ref=ref,
+            eval_viol_fn=eval_viol_fn,
         )
         n_evals = len(ga.archive_configs)
         hv_history = ga.hv_history

@@ -3,6 +3,13 @@
 Metrics follow AxOMaP Table 3: AVG_ABS_ERR, AVG_ABS_REL_ERR (percent), PROB_ERR
 (percent of input pairs producing any error), plus MAX_ABS_ERR and MSE.  All are
 computed exhaustively over all ``2^{2N}`` input pairs, as in the paper.
+
+Two backends share this entry point: the numpy path below is the bit-exact
+oracle; ``backend="jax"`` routes to :mod:`repro.core.fastchar`, which evaluates
+the same statistics as batched device dispatches (tiled Pallas/XLA reductions,
+no float64 error tables).  AVG_ABS_ERR/PROB_ERR/MAX_ABS_ERR/MSE are
+bit-identical across backends; AVG_ABS_REL_ERR agrees to ~1e-6 relative
+(float32 accumulation of the relative-error weights on device).
 """
 
 from __future__ import annotations
@@ -17,12 +24,20 @@ __all__ = ["BEHAV_METRICS", "behav_metrics"]
 
 
 def behav_metrics(
-    spec: OperatorSpec, configs: np.ndarray, batch_size: int = 256
+    spec: OperatorSpec, configs: np.ndarray, batch_size: int = 256,
+    backend: str = "numpy",
 ) -> dict[str, np.ndarray]:
     """Exhaustive BEHAV metrics for a batch of configs.
 
-    Returns a dict of float64 arrays of shape (D,).
+    Returns a dict of float64 arrays of shape (D,).  ``backend="jax"`` runs the
+    accelerator fast path (see module docstring); ``"numpy"`` is the oracle.
     """
+    if backend == "jax":
+        from .fastchar import behav_metrics_jax  # lazy: keeps numpy path JAX-free
+
+        return behav_metrics_jax(spec, configs, batch_size=batch_size)
+    if backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
     configs = np.atleast_2d(np.asarray(configs))
     d = configs.shape[0]
     exact = exact_product_table(spec.n_bits).astype(np.int64)

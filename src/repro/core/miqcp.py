@@ -188,19 +188,42 @@ def _all_configs(L: int) -> np.ndarray:
     return out
 
 
-def solve_enumerate(problem: MapProblem, pool_size: int = 16) -> SolveResult:
-    """Exact vectorized enumeration; only for L <= 22."""
+def solve_enumerate(
+    problem: MapProblem, pool_size: int = 16, backend: str = "numpy"
+) -> SolveResult:
+    """Exact vectorized enumeration; only for L <= 22.
+
+    ``backend="jax"`` scores all 2^L configs (objective + both constraint
+    expressions) in one jit-compiled device dispatch
+    (``fastchar.map_problem_values_jax``); selection stays on the host.  Values
+    are float32 on that path, so near-ties may order differently than numpy.
+    """
     L = problem.n
     if L > 22:
         raise ValueError(f"enumeration infeasible for L={L}")
     cfgs = _all_configs(L)
-    feas = problem.feasible(cfgs)
+    if backend == "jax":
+        from .fastchar import map_problem_values_jax  # lazy JAX import
+
+        objs, vb, vp = map_problem_values_jax(problem, cfgs)
+        feas = (vb <= problem.max_behav + 1e-9) & (vp <= problem.max_ppa + 1e-9)
+    else:
+        feas = problem.feasible(cfgs)
+        objs = problem.obj.value(cfgs)
     if not feas.any():
         return SolveResult(None, np.inf, np.empty((0, L), dtype=np.uint8), "enum")
-    objs = problem.obj.value(cfgs)
     objs = np.where(feas, objs, np.inf)
-    order = np.argsort(objs)[:pool_size]
+    order = np.argsort(objs)[: 2 * pool_size if backend == "jax" else pool_size]
     order = order[np.isfinite(objs[order])]
+    if backend == "jax":
+        # f32 scoring can misclassify configs within ~1e-6 of a bound; the pool
+        # contract is float64 feasibility, so re-validate the few selected and
+        # report the float64 objective of the winner.
+        order = order[problem.feasible(cfgs[order])][:pool_size]
+        if order.size == 0:
+            return SolveResult(None, np.inf, np.empty((0, L), dtype=np.uint8), "enum")
+        best_obj = float(problem.obj.value(cfgs[order[0]]))
+        return SolveResult(cfgs[order[0]], best_obj, cfgs[order], "enum")
     return SolveResult(cfgs[order[0]], float(objs[order[0]]), cfgs[order], "enum")
 
 
@@ -342,18 +365,25 @@ def solve_bnb(
     return SolveResult(best, best_obj, pool_arr, "bnb")
 
 
-def solve(problem: MapProblem, seed: int = 0, pool_size: int = 16) -> SolveResult:
+def solve(
+    problem: MapProblem, seed: int = 0, pool_size: int = 16, backend: str = "numpy"
+) -> SolveResult:
     """Dispatch: exact enumeration when tractable, tabu otherwise."""
     if problem.n <= 16:
-        return solve_enumerate(problem, pool_size=pool_size)
+        return solve_enumerate(problem, pool_size=pool_size, backend=backend)
     return solve_tabu(problem, seed=seed, pool_size=pool_size)
 
 
-def solve_pool(problems: list[MapProblem], seed: int = 0, pool_size: int = 8) -> np.ndarray:
+def solve_pool(
+    problems: list[MapProblem],
+    seed: int = 0,
+    pool_size: int = 8,
+    backend: str = "numpy",
+) -> np.ndarray:
     """Union of solution pools over a problem list (dedup) -- the MaP config pool."""
     configs = []
     for k, prob in enumerate(problems):
-        res = solve(prob, seed=seed + k, pool_size=pool_size)
+        res = solve(prob, seed=seed + k, pool_size=pool_size, backend=backend)
         if len(res.pool):
             configs.append(res.pool)
     if not configs:

@@ -128,7 +128,7 @@ class GAResult:
 
 
 def nsga2(
-    eval_fn: Callable[[np.ndarray], np.ndarray],
+    eval_fn: Callable[[np.ndarray], np.ndarray] | None,
     n_bits: int,
     pop_size: int = 64,
     n_gen: int = 250,
@@ -138,10 +138,20 @@ def nsga2(
     hv_ref: np.ndarray | None = None,
     crossover_p: float = 0.9,
     mutation_p: float | None = None,
+    eval_viol_fn: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]] | None = None,
 ) -> GAResult:
-    """NSGA-II for binary chromosomes; ``eval_fn`` maps (B, L) -> (B, n_obj)."""
+    """NSGA-II for binary chromosomes; ``eval_fn`` maps (B, L) -> (B, n_obj).
+
+    ``eval_viol_fn`` is the batched fast path: a single callable returning
+    ``(objectives, violations)`` for a whole generation, letting a jit-compiled
+    surrogate (``repro.core.fastchar.compile_surrogate_batch``) evaluate each
+    generation in one device dispatch.  When given it replaces both ``eval_fn``
+    and ``violation_fn``.
+    """
     rng = np.random.default_rng(seed)
     mutation_p = mutation_p if mutation_p is not None else 1.0 / n_bits
+    if eval_fn is None and eval_viol_fn is None:
+        raise ValueError("one of eval_fn / eval_viol_fn is required")
 
     pop = rng.integers(0, 2, size=(pop_size, n_bits)).astype(np.uint8)
     if initial_population is not None and len(initial_population):
@@ -149,6 +159,12 @@ def nsga2(
         pop[:k] = initial_population[:k]
 
     def evaluate(P):
+        if eval_viol_fn is not None:
+            objs, viol = eval_viol_fn(P)
+            return (
+                np.asarray(objs, dtype=np.float64),
+                np.asarray(viol, dtype=np.float64),
+            )
         objs = np.asarray(eval_fn(P), dtype=np.float64)
         viol = (
             np.asarray(violation_fn(P), dtype=np.float64)

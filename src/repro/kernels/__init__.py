@@ -4,6 +4,10 @@
                          to the MXU as exact-matmul + rank-R error correction.
 * ``flash_attention`` -- blockwise online-softmax attention (causal + GQA).
 * ``ssd_scan``        -- Mamba-2 chunked state-space scan.
+* ``behav_stats``     -- tiled BEHAV error-statistics reduction over
+                         reconstructed error-table tiles (the DSE
+                         characterization fast path, see ``char_kernels.py``
+                         and ``repro.core.fastchar``).
 
 Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec) with an ``ops.py``
 jit wrapper and a ``ref.py`` pure-jnp oracle.  On this CPU-only container the
@@ -11,6 +15,7 @@ kernels validate under ``interpret=True``; on TPU the same BlockSpecs drive
 HBM->VMEM pipelining.
 """
 
+from .char_kernels import behav_stats_pallas
 from .ops import axo_matmul, flash_attention, on_tpu, ssd_scan
 
-__all__ = ["axo_matmul", "flash_attention", "ssd_scan", "on_tpu"]
+__all__ = ["axo_matmul", "behav_stats_pallas", "flash_attention", "ssd_scan", "on_tpu"]

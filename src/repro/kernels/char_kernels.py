@@ -1,0 +1,133 @@
+"""Pallas reduction kernel for batched BEHAV characterization (fastchar backend).
+
+The AxOMaP bottleneck is turning thousands of LUT configs into error statistics:
+the numpy oracle materializes a ``(D, 2^N, 2^N)`` float64 error table per batch
+(134 MB per 256-config batch at N=8) and reduces it on the host.  This kernel
+computes the same statistics *without ever materializing the error tables in
+HBM*: each grid step reconstructs one ``(Db, Ta, B)`` error-table tile in VMEM
+from the tiny per-row config tables and reduces it to per-config partial sums.
+
+Inputs (see ``repro.core.fastchar`` for how they are built):
+
+  small: (R, D, 4, B) int32 -- per-row outputs ``V_r`` of config ``d`` for each
+         of the 4 values of the row's multiplier bit-pair, for every B operand.
+         This is the result of the vectorized ``jnp.take`` over ``RowTables``;
+         it is ~4096 ints per config vs 65536 for the full table.
+  exact: (A, B) int32 -- exact signed product table.
+  w:     (A, B) f32   -- 1 / max(|exact|, 1), the relative-error weights.
+
+The approximate product of config ``d`` for operand codes ``(a, b)`` is
+
+    P[d, a, b] = sum_r small[r, d, pair_r(a), b] << 2r
+
+where ``pair_r(a) = 2*bit_{2r}(a) + bit_{2r+1}(a)`` selects one of 4 planes.
+Plane selection is done with broadcast ``where`` masks over an iota of the A
+tile -- no gathers inside the kernel, pure VPU work.
+
+Outputs are *per-A-tile partial* statistics so every integer channel stays
+exactly representable in int32 (the host combines tiles in int64 -- that is
+what makes four of the five BEHAV metrics bit-identical to the float64 numpy
+oracle).  Channels of the (n_ta, D, 8) outputs:
+
+  int32: 0 sum|e|   1 count(e != 0)   2 max|e|
+         3 sum hi^2  4 sum hi*lo  5 sum lo^2    (hi = |e| >> 8, lo = |e| & 255,
+                                                 so e^2 = 65536*h2 + 512*hl + l2)
+  f32:   0 sum |e| * w   (relative error; f32 rounding, combined in f64)
+
+Tile-size rule: callers must pick ``a_tile`` such that
+``a_tile * B * max|e| < 2^31`` (see ``fastchar.max_abs_error_bound``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["behav_stats_pallas", "N_CHAN"]
+
+N_CHAN = 8  # output channel count (padded for lane alignment)
+
+
+def _kernel(small_ref, exact_ref, w_ref, int_ref, rel_ref, *, rows: int, a_tile: int):
+    """One (d_block, a_tile) step: rebuild the error tile, reduce to partials."""
+    j = pl.program_id(1)
+    b = exact_ref.shape[-1]
+
+    # Absolute A codes covered by this tile, broadcast over the B axis.
+    a_ids = jax.lax.broadcasted_iota(jnp.int32, (a_tile, b), 0) + j * a_tile
+
+    approx = None
+    for r in range(rows):  # static unroll over partial-product rows
+        pair = 2 * ((a_ids >> (2 * r)) & 1) + ((a_ids >> (2 * r + 1)) & 1)
+        acc = None
+        for p in range(4):  # select one of 4 bit-pair planes, no gathers
+            plane = small_ref[r, :, p, :]  # (Db, B)
+            term = jnp.where((pair == p)[None, :, :], plane[:, None, :], 0)
+            acc = term if acc is None else acc + term
+        shifted = acc << (2 * r)
+        approx = shifted if approx is None else approx + shifted
+
+    err = approx - exact_ref[...][None]            # (Db, Ta, B) int32
+    abs_e = jnp.abs(err)
+
+    hi = abs_e >> 8
+    lo = abs_e & 255
+    s_abs = abs_e.sum(axis=(1, 2))
+    cnt = (err != 0).astype(jnp.int32).sum(axis=(1, 2))
+    mx = abs_e.max(axis=(1, 2))
+    h2 = (hi * hi).sum(axis=(1, 2))
+    hl = (hi * lo).sum(axis=(1, 2))
+    l2 = (lo * lo).sum(axis=(1, 2))
+    zero = jnp.zeros_like(s_abs)
+    int_ref[...] = jnp.stack(
+        [s_abs, cnt, mx, h2, hl, l2, zero, zero], axis=-1
+    )[None]
+
+    rel = (abs_e.astype(jnp.float32) * w_ref[...][None]).sum(axis=(1, 2))
+    zf = jnp.zeros_like(rel)
+    rel_ref[...] = jnp.stack([rel, zf, zf, zf, zf, zf, zf, zf], axis=-1)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "a_tile", "interpret"))
+def behav_stats_pallas(
+    small: jnp.ndarray,           # (R, D, 4, B) int32
+    exact: jnp.ndarray,           # (A, B) int32
+    w: jnp.ndarray,               # (A, B) f32
+    d_block: int = 8,
+    a_tile: int = 64,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Tiled BEHAV partial statistics; returns (int_partials, rel_partials).
+
+    Shapes: (A // a_tile, D, N_CHAN) int32 and float32.  D must divide by
+    ``d_block`` and A by ``a_tile`` (``fastchar`` pads the config batch).
+    """
+    rows, d, four, b = small.shape
+    a = exact.shape[0]
+    assert four == 4 and exact.shape == (a, b) and w.shape == (a, b)
+    assert d % d_block == 0, (d, d_block)
+    assert a % a_tile == 0, (a, a_tile)
+    n_ta = a // a_tile
+
+    grid = (d // d_block, n_ta)
+    return pl.pallas_call(
+        functools.partial(_kernel, rows=rows, a_tile=a_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, d_block, 4, b), lambda i, j: (0, i, 0, 0)),
+            pl.BlockSpec((a_tile, b), lambda i, j: (j, 0)),
+            pl.BlockSpec((a_tile, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_block, N_CHAN), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, d_block, N_CHAN), lambda i, j: (j, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_ta, d, N_CHAN), jnp.int32),
+            jax.ShapeDtypeStruct((n_ta, d, N_CHAN), jnp.float32),
+        ],
+        interpret=interpret,
+    )(small, exact, w)

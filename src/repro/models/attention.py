@@ -51,6 +51,32 @@ __all__ = [
 NEG_INF = -1e30
 
 
+@jax.custom_vjp
+def _pinned(xs):
+    """``optimization_barrier`` with a gradient rule.
+
+    ``jax.lax.optimization_barrier`` has no differentiation rule, so using it on
+    the training path raises ``NotImplementedError`` under ``grad``.  The barrier
+    only constrains XLA scheduling -- mathematically it is the identity -- so the
+    VJP passes cotangents straight through.  (No barrier on the backward pass:
+    cotangents for integer leaves are ``float0`` placeholders that
+    ``optimization_barrier`` cannot consume, and the backward all-gathers are
+    not the ones being pinned.)
+    """
+    return jax.lax.optimization_barrier(xs)
+
+
+def _pinned_fwd(xs):
+    return _pinned(xs), None
+
+
+def _pinned_bwd(_, g):
+    return (g,)
+
+
+_pinned.defvjp(_pinned_fwd, _pinned_bwd)
+
+
 def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
     """positions (..., S) int -> cos, sin (..., S, head_dim//2), computed on the fly."""
     inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
@@ -197,7 +223,7 @@ def chunked_attention(
         # Pin the (gathered) KV buffers ONCE before the per-block loops --
         # otherwise XLA sinks a fresh seq all-gather into every loop body
         # (measured +50% all-gather bytes on a 4k train cell without this).
-        kp, vp, kv_pos = jax.lax.optimization_barrier((kp, vp, kv_pos))
+        kp, vp, kv_pos = _pinned((kp, vp, kv_pos))
         outs = []
         for i in range(nq):
             last_pos = q_start + (i + 1) * q_chunk - 1

@@ -33,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from .layers import mlp_apply, mlp_spec
-from .sharding import ShardingRules, constrain, _current_mesh
+from .sharding import ShardingRules, constrain, _current_mesh, shard_map
 from .spec import ParamSpec
 
 __all__ = ["moe_spec", "moe_apply", "moe_capacity"]
@@ -227,7 +227,7 @@ def moe_apply(
 
     if decode_ws:
         cap = moe_capacity(t, cfg)
-        out = jax.shard_map(
+        out = shard_map(
             partial(_ep_decode_body, cfg, cap),
             mesh=mesh,
             in_specs=(
@@ -239,7 +239,7 @@ def moe_apply(
                 P(None, None, None),           # gates
             ),
             out_specs=P(None, None, "data"),
-            check_vma=False,
+            check=False,
         )(p["w_gate"], p["w_up"], p["w_down"], x, top_i, gates)
     elif ep_ok:
         ep = mesh.shape["model"]
@@ -249,7 +249,7 @@ def moe_apply(
         )
         cap = moe_capacity(t // data_n_tok, cfg)
         tok_spec = P(bspec, None, None)
-        out = jax.shard_map(
+        out = shard_map(
             partial(_ep_body, cfg, cap),
             mesh=mesh,
             in_specs=(
@@ -261,7 +261,7 @@ def moe_apply(
                 tok_spec,                 # gates
             ),
             out_specs=tok_spec,
-            check_vma=False,
+            check=False,
         )(p["w_gate"], p["w_up"], p["w_down"], x, top_i, gates)
     else:
         cap = moe_capacity(t, cfg)

@@ -14,7 +14,10 @@ from dataclasses import dataclass, field, replace
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["ShardingRules", "BASE_RULES", "logical_pspec", "constrain", "named_sharding"]
+__all__ = [
+    "ShardingRules", "BASE_RULES", "logical_pspec", "constrain",
+    "named_sharding", "set_mesh",
+]
 
 MeshAxes = tuple[str, ...]
 
@@ -136,6 +139,36 @@ def constrain(x, rules: ShardingRules, *axes: str | None):
         return x
     spec = rules.resolve(tuple(axes), kind="act")
     return jax.lax.with_sharding_constraint(x, named_sharding(mesh, spec))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` portable across JAX versions.
+
+    Newer JAX hoists shard_map to the top level with a ``check_vma`` flag; on
+    0.4.x it lives in ``jax.experimental.shard_map`` with ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
+def set_mesh(mesh: Mesh):
+    """Ambient-mesh context manager, portable across JAX versions.
+
+    Newer JAX exposes ``jax.set_mesh``; older releases (e.g. 0.4.x) only have
+    the ``with mesh:`` thread-resources context, which ``_current_mesh`` below
+    also recognizes.  A ``Mesh`` is itself a context manager, so returning it
+    directly gives the fallback.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def _current_mesh() -> Mesh | None:

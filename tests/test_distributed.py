@@ -31,7 +31,7 @@ def test_moe_ep_shard_map_matches_reference():
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.registry import get_arch
         from repro.models.moe import moe_spec, moe_apply
-        from repro.models.sharding import BASE_RULES
+        from repro.models.sharding import BASE_RULES, set_mesh
         from repro.models.spec import init_params
 
         cfg = get_arch("jamba-v0.1-52b").reduced()   # 8 experts top-2
@@ -42,7 +42,7 @@ def test_moe_ep_shard_map_matches_reference():
         ref, aux_ref = moe_apply(p, x, cfg, BASE_RULES)  # no mesh -> reference
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             ep, aux_ep = jax.jit(lambda p, x: moe_apply(p, x, cfg, BASE_RULES))(p, x)
 
         err = float(jnp.max(jnp.abs(ref - ep)))
@@ -89,7 +89,7 @@ def test_train_step_numerically_equal_on_mesh_vs_single():
         from repro.data.synthetic import SyntheticLM
         from repro.launch.steps import make_train_step
         from repro.models.model import model_spec
-        from repro.models.sharding import BASE_RULES, named_sharding
+        from repro.models.sharding import BASE_RULES, named_sharding, set_mesh
         from repro.models.spec import init_params, param_shardings
         from repro.optim import make_optimizer, cosine_schedule
         from jax.sharding import PartitionSpec as P
@@ -105,7 +105,7 @@ def test_train_step_numerically_equal_on_mesh_vs_single():
         loss_single = float(m1["loss"])
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             spec = model_spec(cfg)
             p_sh = param_shardings(spec, BASE_RULES, mesh)
             params_m = jax.device_put(params, p_sh)

@@ -1,0 +1,233 @@
+"""fastchar parity: the JAX batched characterization engine vs the numpy oracle.
+
+AVG_ABS_ERR / PROB_ERR / MAX_ABS_ERR / MSE must match the float64 numpy oracle
+*bit-for-bit* (integer partials combined in int64); AVG_ABS_REL_ERR accumulates
+its weights in f32 on device and must agree to ~1e-6 relative.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import characterize
+from repro.core.fastchar import (
+    behav_metrics_jax,
+    compile_surrogate_batch,
+    default_a_tile,
+    map_problem_values_jax,
+    max_abs_error_bound,
+)
+from repro.core.metrics import BEHAV_METRICS, behav_metrics
+from repro.core.miqcp import _all_configs
+from repro.core.operator_model import accurate_config, spec_for
+
+EXACT_KEYS = ("AVG_ABS_ERR", "PROB_ERR", "MAX_ABS_ERR", "MSE")
+REL_KEY = "AVG_ABS_REL_ERR"
+
+
+def assert_parity(oracle, fast, rel_tol=1e-5):
+    for k in EXACT_KEYS:
+        np.testing.assert_array_equal(oracle[k], fast[k], err_msg=k)
+    np.testing.assert_allclose(oracle[REL_KEY], fast[REL_KEY], rtol=rel_tol, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# BEHAV parity vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def test_parity_4x4_exhaustive_all_1024_configs():
+    """Every 4x4 config: the fast path reproduces the oracle over the whole space."""
+    spec = spec_for(4)
+    cfgs = _all_configs(spec.n_luts)
+    oracle = behav_metrics(spec, cfgs)
+    fast = behav_metrics_jax(spec, cfgs, impl="xla")
+    assert_parity(oracle, fast)
+
+
+def test_parity_8x8_random_256_configs():
+    spec = spec_for(8)
+    rng = np.random.default_rng(0)
+    cfgs = rng.integers(0, 2, (256, spec.n_luts)).astype(np.uint8)
+    oracle = behav_metrics(spec, cfgs)
+    fast = behav_metrics_jax(spec, cfgs, impl="xla")
+    assert_parity(oracle, fast)
+
+
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_parity_degenerate_configs(n_bits):
+    """All-zeros (every LUT removed) and all-ones (accurate) corner configs."""
+    spec = spec_for(n_bits)
+    cfgs = np.stack([np.zeros(spec.n_luts, np.uint8), accurate_config(spec)])
+    oracle = behav_metrics(spec, cfgs)
+    fast = behav_metrics_jax(spec, cfgs, impl="xla")
+    assert_parity(oracle, fast)
+    # the accurate config is error-free on both paths
+    for k in BEHAV_METRICS:
+        assert fast[k][1] == 0.0, k
+
+
+def test_parity_pallas_impl_8x8():
+    """Interpret-mode Pallas kernel path end-to-end (small batch: it is the
+    correctness twin of the XLA impl, not the CPU fast path)."""
+    spec = spec_for(8)
+    rng = np.random.default_rng(1)
+    cfgs = rng.integers(0, 2, (16, spec.n_luts)).astype(np.uint8)
+    oracle = behav_metrics(spec, cfgs)
+    fast = behav_metrics_jax(spec, cfgs, impl="pallas", interpret=True)
+    assert_parity(oracle, fast)
+
+
+def test_chunking_and_padding_invariance():
+    """Results must not depend on batch_size chunking or d_block padding."""
+    spec = spec_for(4)
+    rng = np.random.default_rng(2)
+    cfgs = rng.integers(0, 2, (37, spec.n_luts)).astype(np.uint8)  # odd D
+    ref = behav_metrics_jax(spec, cfgs, impl="xla", batch_size=1024)
+    for bs, db in ((8, 8), (16, 4), (37, 8)):
+        out = behav_metrics_jax(spec, cfgs, impl="xla", batch_size=bs, d_block=db)
+        for k in EXACT_KEYS:
+            np.testing.assert_array_equal(ref[k], out[k], err_msg=f"{k} bs={bs}")
+        np.testing.assert_allclose(ref[REL_KEY], out[REL_KEY], rtol=1e-6)
+
+
+def test_a_tile_bound_is_int32_safe():
+    for n_bits in (2, 4, 8):
+        spec = spec_for(n_bits)
+        tile = default_a_tile(spec)
+        assert spec.n_inputs % tile == 0
+        assert tile * spec.n_inputs * max_abs_error_bound(spec) < 2**30
+
+
+def test_characterize_backend_switch_matches():
+    spec = spec_for(4)
+    rng = np.random.default_rng(3)
+    cfgs = rng.integers(0, 2, (24, spec.n_luts)).astype(np.uint8)
+    ds_np = characterize(spec, cfgs, backend="numpy")
+    ds_jx = characterize(spec, cfgs, backend="jax")
+    for k in EXACT_KEYS:
+        np.testing.assert_array_equal(ds_np.metrics[k], ds_jx.metrics[k], err_msg=k)
+    np.testing.assert_allclose(
+        ds_np.metrics[REL_KEY], ds_jx.metrics[REL_KEY], rtol=1e-5
+    )
+    # PPA stays on the shared numpy tables: identical by construction
+    for k in ("POWER", "CPD", "LUTS", "PDP", "PDPLUT"):
+        np.testing.assert_array_equal(ds_np.metrics[k], ds_jx.metrics[k], err_msg=k)
+
+
+def test_unknown_backend_and_impl_raise():
+    spec = spec_for(4)
+    cfg = accurate_config(spec)[None]
+    with pytest.raises(ValueError):
+        behav_metrics(spec, cfg, backend="torch")
+    with pytest.raises(ValueError):
+        behav_metrics_jax(spec, cfg, impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Batched surrogate evaluation (NSGA-II one-dispatch path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    from repro.core.automl import fit_estimators
+    from repro.core.dataset import build_training_dataset
+
+    spec = spec_for(4)
+    ds = build_training_dataset(spec, n_random=200, seed=0)
+    keys = ("AVG_ABS_REL_ERR", "PDPLUT")
+    ests = fit_estimators(
+        ds.configs.astype(np.float64),
+        {k: ds.metrics[k] for k in keys},
+        n_quad=16,
+        seed=0,
+    )
+    return spec, ds, ests
+
+
+def test_surrogate_batch_matches_numpy_estimators(fitted):
+    spec, ds, ests = fitted
+    mb = float(ds.metrics["AVG_ABS_REL_ERR"].max())
+    mp = float(ds.metrics["PDPLUT"].max())
+    fn = compile_surrogate_batch(ests, "AVG_ABS_REL_ERR", "PDPLUT", mb, mp)
+
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 2, (64, spec.n_luts)).astype(np.float64)
+    objs, viol = fn(X)
+    assert objs.shape == (64, 2) and viol.shape == (64,)
+
+    ref_b = ests["AVG_ABS_REL_ERR"].predict(X)
+    ref_p = ests["PDPLUT"].predict(X)
+    scale_b = max(np.abs(ref_b).max(), 1.0)
+    scale_p = max(np.abs(ref_p).max(), 1.0)
+    np.testing.assert_allclose(objs[:, 0], ref_b, atol=1e-4 * scale_b)
+    np.testing.assert_allclose(objs[:, 1], ref_p, atol=1e-4 * scale_p)
+
+    ref_viol = (
+        np.maximum(0.0, ref_b - mb) / max(abs(mb), 1e-9)
+        + np.maximum(0.0, ref_p - mp) / max(abs(mp), 1e-9)
+    )
+    np.testing.assert_allclose(viol, ref_viol, atol=1e-5)
+    assert (viol >= 0).all()
+
+
+def test_nsga2_accepts_batched_eval_viol_fn(fitted):
+    from repro.core.moo import nsga2
+
+    spec, ds, ests = fitted
+    mb = float(ds.metrics["AVG_ABS_REL_ERR"].max())
+    mp = float(ds.metrics["PDPLUT"].max())
+    fn = compile_surrogate_batch(ests, "AVG_ABS_REL_ERR", "PDPLUT", mb, mp)
+    res = nsga2(None, n_bits=spec.n_luts, pop_size=12, n_gen=4, seed=0,
+                eval_viol_fn=fn)
+    assert res.population.shape == (12, spec.n_luts)
+    assert len(res.archive_configs) == 12 * 5  # init + 4 generations
+    assert np.isfinite(res.archive_objs).all()
+
+
+def test_run_dse_jax_backend_smoke(fitted):
+    from repro.core.dse import DSESettings, run_dse
+
+    spec, ds, _ = fitted
+    st = DSESettings(const_sf=1.0, pop_size=12, n_gen=4, n_quad_grid=(0,),
+                     pool_size=2, seed=0, backend="jax")
+    r = run_dse(spec, ds, "map+ga", settings=st)
+    assert r.hv_ppf >= 0.0 and r.hv_vpf >= 0.0
+    assert r.n_evals > 0
+    if len(r.vpf_objs):
+        assert np.isfinite(r.vpf_objs).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched MaP enumeration scoring
+# ---------------------------------------------------------------------------
+
+
+def test_map_problem_values_match_quadexpr(fitted):
+    from repro.core.correlation import rank_quadratic_terms
+    from repro.core.miqcp import build_problems, solve_enumerate
+    from repro.core.regression import fit_poly
+
+    spec, ds, _ = fitted
+    X = ds.configs.astype(np.float64)
+    yb = ds.metrics["AVG_ABS_REL_ERR"]
+    yp = ds.metrics["PDPLUT"]
+    quad = rank_quadratic_terms(X, yb)[:4]
+    bm = fit_poly(X, yb, quad_pairs=quad)
+    pm = fit_poly(X, yp, quad_pairs=quad)
+    problems = build_problems(
+        bm, pm, float(yb.max()), float(yp.max()), 1.0,
+        wt_grid=np.array([0.5]), n_quad=4,
+    )
+    prob = problems[0]
+    cfgs = _all_configs(spec.n_luts)
+
+    obj, vb, vp = map_problem_values_jax(prob, cfgs)
+    np.testing.assert_allclose(obj, prob.obj.value(cfgs), atol=1e-4)
+    np.testing.assert_allclose(vb, prob.behav.value(cfgs), atol=1e-4)
+    np.testing.assert_allclose(vp, prob.ppa.value(cfgs), atol=1e-4)
+
+    res_np = solve_enumerate(prob, pool_size=4, backend="numpy")
+    res_jx = solve_enumerate(prob, pool_size=4, backend="jax")
+    assert abs(res_np.best_obj - res_jx.best_obj) < 1e-4
+    assert prob.feasible(res_jx.pool).all()

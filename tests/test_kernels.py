@@ -141,6 +141,65 @@ def test_ssd_scan_matches_sequential_ref(shape, dtype):
     np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=tol, rtol=tol)
 
 
+# ---------------------------------------------------------------------------
+# behav stats (characterization reduction)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits,d,d_block,a_tile", [
+    (4, 8, 8, 16),       # single A tile
+    (4, 16, 4, 8),       # multi-tile, small blocks
+    (8, 8, 8, 64),       # 8x8 default tiling
+    (8, 16, 8, 32),      # 8x8 alternate tiling
+])
+def test_behav_stats_kernel_matches_xla_twin(n_bits, d, d_block, a_tile):
+    """Pallas kernel partials (interpret=True) vs the jit'd XLA twin: integer
+    channels bit-equal, f32 relative-error channel allclose."""
+    from repro.core.fastchar import _device_tables, _gather_small, _partials_xla
+    from repro.core.operator_model import config_to_masks, spec_for
+    from repro.kernels.char_kernels import behav_stats_pallas
+
+    spec = spec_for(n_bits)
+    rng = np.random.default_rng(n_bits * 100 + d)
+    cfgs = rng.integers(0, 2, (d, spec.n_luts)).astype(np.uint8)
+    cfgs[0] = 0
+    cfgs[-1] = 1
+    masks = jnp.asarray(config_to_masks(spec, cfgs).astype(np.int32))
+
+    _, exact, w, _ = _device_tables(n_bits)
+    small = _gather_small(masks, n_bits)
+    int_k, rel_k = behav_stats_pallas(
+        small, jnp.asarray(exact), jnp.asarray(w),
+        d_block=d_block, a_tile=a_tile, interpret=True,
+    )
+    int_x, rel_x = _partials_xla(masks, n_bits, a_tile, d_block)
+    np.testing.assert_array_equal(np.asarray(int_k), np.asarray(int_x))
+    np.testing.assert_allclose(
+        np.asarray(rel_k), np.asarray(rel_x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_behav_stats_kernel_block_shapes_are_equivalent():
+    """Combined metrics are invariant to (d_block, a_tile) kernel tiling."""
+    from repro.core.fastchar import behav_metrics_jax
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(4)
+    rng = np.random.default_rng(7)
+    cfgs = rng.integers(0, 2, (8, spec.n_luts)).astype(np.uint8)
+    outs = [
+        behav_metrics_jax(spec, cfgs, impl="pallas", interpret=True,
+                          d_block=db, a_tile=at)
+        for db, at in [(8, 16), (4, 8), (2, 4)]
+    ]
+    for o in outs[1:]:
+        for k in outs[0]:
+            if k == "AVG_ABS_REL_ERR":
+                np.testing.assert_allclose(o[k], outs[0][k], rtol=1e-6)
+            else:
+                np.testing.assert_array_equal(o[k], outs[0][k], err_msg=k)
+
+
 def test_ssd_scan_matches_xla_chunked_path():
     """Kernel vs the model's XLA ssd_chunked (the execution path)."""
     from repro.models.ssm import ssd_chunked

@@ -1,7 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test dependency (see pyproject.toml); when it is
+not installed the whole module is skipped instead of aborting collection.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.apps.base import quantize_int8
 from repro.core.moo import hypervolume_2d, pareto_mask

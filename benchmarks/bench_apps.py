@@ -1,5 +1,10 @@
 """Paper Figs. 16-19: application-specific DSE (ECG / MNIST / GAUSS, plus the
-beyond-paper transformer-FFN target) -- AxOMaP vs GA vs the frozen library."""
+beyond-paper transformer-FFN target) -- AxOMaP vs GA vs the frozen library.
+
+Runs on the accelerator-native app engine (``backend="jax"``: fastchar
+characterization + fastapp application BEHAV + one-dispatch NSGA-II fitness);
+a numpy-vs-jax hypervolume parity row on the MNIST target keeps the two
+backends honest against each other at identical seeds."""
 
 from __future__ import annotations
 
@@ -19,6 +24,8 @@ from repro.core.moo import hypervolume_2d
 
 from .common import BenchCtx, row
 
+BACKEND = "jax"  # the app-engine path; "numpy" reproduces the oracle baseline
+
 
 def run(ctx: BenchCtx) -> list[dict]:
     ds = ctx.ds8()
@@ -30,14 +37,14 @@ def run(ctx: BenchCtx) -> list[dict]:
 
     for name in apps:
         app = APPLICATIONS[name]()
-        app_ds = app.characterized_dataset(spec, ds)
+        app_ds = app.characterized_dataset(spec, ds, backend=BACKEND)
         bkey = app.behav_metric_name()
         X = app_ds.configs.astype(np.float64)
         estimators = fit_estimators(
             X, {bkey: app_ds.metrics[bkey], PPA_KEY: app_ds.metrics[PPA_KEY]},
             n_quad=24, seed=ctx.seed,
         )
-        char_fn = app.characterize_fn(spec)
+        char_fn = app.characterize_fn(spec, backend=BACKEND)
         lib_objs = char_fn(lib)
 
         for const_sf in sf_grid:
@@ -45,6 +52,7 @@ def run(ctx: BenchCtx) -> list[dict]:
                 behav_key=bkey, const_sf=const_sf, pop_size=32,
                 n_gen=max(10, ctx.n_gen // 2),
                 n_quad_grid=(0, 8), pool_size=4, seed=ctx.seed,
+                backend=BACKEND,
             )
             ref = hv_reference(app_ds, st)
             max_b = const_sf * app_ds.metrics[bkey].max()
@@ -54,7 +62,7 @@ def run(ctx: BenchCtx) -> list[dict]:
             for method in ("ga", "map+ga"):
                 r = run_dse(spec, app_ds, method, settings=st,
                             estimators=estimators, map_pool=pool,
-                            characterize_fn=char_fn, ref=ref)
+                            app=app, ref=ref)
                 hv[method] = r.hv_vpf
             feas = (lib_objs[:, 0] <= max_b) & (lib_objs[:, 1] <= max_p)
             hv["evoapprox-style"] = (
@@ -70,4 +78,23 @@ def run(ctx: BenchCtx) -> list[dict]:
             rows.append(row(f"apps.fig16_{name}_sf{const_sf}_gain", 0.0, gain))
             rows.append(row(f"apps.fig1x_{name}_sf{const_sf}_lib_feasible", 0.0,
                             f"{int(feas.sum())}/{len(lib)}"))
+
+    # -- backend parity: same seeds, numpy oracle vs jax engine (MNIST) ------
+    app = APPLICATIONS["mnist"]()
+    bkey = app.behav_metric_name()
+    hv_bk = {}
+    for backend in ("numpy", "jax"):
+        app_ds = app.characterized_dataset(spec, ds, backend=backend)
+        st = DSESettings(
+            behav_key=bkey, const_sf=1.5, pop_size=24, n_gen=10,
+            n_quad_grid=(0,), pool_size=2, seed=ctx.seed, backend=backend,
+        )
+        r = run_dse(spec, app_ds, "ga", settings=st, app=app,
+                    ref=hv_reference(app_ds, st))
+        hv_bk[backend] = r.hv_vpf
+        rows.append(row(f"apps.backend_parity_mnist_{backend}", 0.0,
+                        f"hv_vpf={r.hv_vpf:.6g}"))
+    denom = max(abs(hv_bk["numpy"]), 1e-9)
+    rows.append(row("apps.backend_parity_mnist_rel_diff", 0.0,
+                    f"{abs(hv_bk['jax'] - hv_bk['numpy']) / denom:.2e}"))
     return rows

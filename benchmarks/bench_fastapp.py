@@ -1,0 +1,94 @@
+"""Application-BEHAV throughput: numpy oracle vs the fastapp JAX engine.
+
+The app-level DSE hot path is turning LUT-config batches into application
+BEHAV (filtered-signal peak scores, GEMV logits, conv PSNR, FFN outputs).
+Headline rows: BEHAV configs/sec per app at D=128 on the signed 8x8 operator
+(L=36) plus the all-apps aggregate -- the fastapp engine must be >= 5x the
+numpy oracle in aggregate (it is ~6x on 2-core CPU hosts: ECG/MNIST reach
+12-17x via the pair-plane GEMM paths, gauss ~7x, and the FFN ~4x because its
+per-config requantized second GEMM stays on the gather path).
+
+Also reported: device product-table construction and the interpret-mode
+Pallas table-GEMV (correctness path; slow on CPU by design).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import APPLICATIONS
+from repro.core.dataset import gen_random
+from repro.core.operator_model import spec_for
+
+from .common import BenchCtx, row
+
+APP_ORDER = ("ecg", "mnist", "gauss", "ffn")
+
+
+def _best_of(fn, n: int = 3) -> float:
+    """Best-of-n wall seconds (jit paths are warmed up by the caller)."""
+    best = np.inf
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    spec = ctx.spec8
+    rows: list[dict] = []
+    d = 128
+    cfgs = gen_random(spec, d, seed=ctx.seed)
+
+    # -- headline: app BEHAV for a 128-config batch, per app + aggregate -----
+    tot_np = tot_jx = 0.0
+    for name in APP_ORDER:
+        app = APPLICATIONS[name]()
+        app.behav(spec, cfgs, backend="jax")  # compile at this shape
+        t_jx = _best_of(lambda: app.behav(spec, cfgs, backend="jax"))
+        t_np = _best_of(
+            lambda: app.behav(spec, cfgs, backend="numpy"), n=1 if ctx.quick else 2
+        )
+        tot_np += t_np
+        tot_jx += t_jx
+        rows.append(row(f"fastapp.behav_{name}_numpy", t_np * 1e6,
+                        f"{d / t_np:.0f} configs/s"))
+        rows.append(row(f"fastapp.behav_{name}_jax", t_jx * 1e6,
+                        f"{d / t_jx:.0f} configs/s"))
+        rows.append(row(f"fastapp.behav_{name}_speedup", 0.0, f"{t_np / t_jx:.1f}x"))
+    rows.append(row("fastapp.behav_all_apps_numpy", tot_np * 1e6,
+                    f"{4 * d / tot_np:.0f} configs/s"))
+    rows.append(row("fastapp.behav_all_apps_jax", tot_jx * 1e6,
+                    f"{4 * d / tot_jx:.0f} configs/s"))
+    rows.append(row("fastapp.behav_speedup", 0.0,
+                    f"{tot_np / tot_jx:.1f}x (all four apps, D={d}, 8x8)"))
+
+    # -- device product-table construction -----------------------------------
+    from repro.apps.fastapp import product_tables_jax, table_batch, table_matmul_jax
+    from repro.core.operator_model import product_tables
+
+    np.asarray(product_tables_jax(spec, cfgs))  # compile
+    t_tj = _best_of(lambda: np.asarray(product_tables_jax(spec, cfgs)))
+    t_tn = _best_of(lambda: product_tables(spec, cfgs))
+    rows.append(row("fastapp.product_tables_numpy", t_tn * 1e6,
+                    f"{d / t_tn:.0f} tables/s"))
+    rows.append(row("fastapp.product_tables_jax", t_tj * 1e6,
+                    f"{d / t_tj:.0f} tables/s"))
+
+    if not ctx.quick:
+        # interpret-mode Pallas table-GEMV (correctness path, slow on CPU)
+        app = APPLICATIONS["mnist"]()
+        app._prepare(spec.n_bits)
+        batch = table_batch(spec, cfgs[:8])
+        call = lambda: np.asarray(
+            table_matmul_jax(batch, app._x_codes, app._w_codes,
+                             impl="pallas", interpret=True)
+        )
+        call()
+        t_pl = _best_of(call, n=1)
+        rows.append(row("fastapp.gemv_pallas_interpret", t_pl * 1e6,
+                        f"{8 / t_pl:.1f} configs/s"))
+    return rows

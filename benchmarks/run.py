@@ -27,6 +27,7 @@ BENCHES = [
     "apps",           # Figs. 16-19
     "kernels",        # beyond-paper kernel parity
     "fastchar",       # batched characterization engine vs numpy oracle
+    "fastapp",        # batched application-BEHAV engine vs numpy oracle
 ]
 
 

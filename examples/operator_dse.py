@@ -1,17 +1,22 @@
-"""Operator-level DSE on the paper's signed 8x8 multiplier (paper §5.3/5.4).
+"""Operator- and application-level DSE on the paper's signed 8x8 multiplier.
 
   PYTHONPATH=src python examples/operator_dse.py [--const-sf 0.5] [--gens 40]
+  PYTHONPATH=src python examples/operator_dse.py --app mnist --backend jax
 
 Compares GA-only (AppAxO-style), MaP-only, and MaP+GA (AxOMaP) and prints the
 validated Pareto fronts + hypervolumes, plus the EvoApprox-style frozen-library
-baseline under the same constraints.
+baseline under the same constraints.  ``--app {ecg,mnist,gauss,ffn}`` switches
+the BEHAV objective to an application metric (paper Figs. 16-19);
+``--backend jax`` runs characterization and application BEHAV through the
+accelerator-native fastchar/fastapp engines.
 """
 
 import argparse
 
 import numpy as np
 
-from repro.core.dataset import BEHAV_KEY, PPA_KEY, build_training_dataset, characterize
+from repro.apps import APPLICATIONS
+from repro.core.dataset import BEHAV_KEY, PPA_KEY, build_training_dataset
 from repro.core.dse import (
     DSESettings,
     fixed_library,
@@ -28,6 +33,10 @@ def main():
     ap.add_argument("--const-sf", type=float, default=0.5)
     ap.add_argument("--gens", type=int, default=40)
     ap.add_argument("--n-random", type=int, default=1200)
+    ap.add_argument("--app", choices=sorted(APPLICATIONS), default=None,
+                    help="application-level DSE target (default: operator-level)")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="characterization/app-BEHAV engine")
     args = ap.parse_args()
 
     spec = spec_for(8)
@@ -35,25 +44,41 @@ def main():
     ds = build_training_dataset(
         spec, n_random=args.n_random, seed=0,
         cache_path=f"experiments/cache/ds8_{args.n_random}_0.npz",
+        backend=args.backend,
     )
     print(f"training dataset: {len(ds)} characterized configs")
 
+    app = None
+    behav_key = BEHAV_KEY
+    if args.app is not None:
+        app = APPLICATIONS[args.app]()
+        behav_key = app.behav_metric_name()
+        ds = app.characterized_dataset(spec, ds, backend=args.backend)
+        print(f"application target: {args.app} (BEHAV = {behav_key}, "
+              f"backend = {args.backend})")
+
     st = DSESettings(const_sf=args.const_sf, pop_size=48, n_gen=args.gens,
-                     n_quad_grid=(0, 4, 16), pool_size=6, seed=0)
+                     n_quad_grid=(0, 4, 16), pool_size=6, seed=0,
+                     behav_key=behav_key, backend=args.backend)
     ref = hv_reference(ds, st)
     pool = map_solution_pool(spec, ds, st)
     print(f"MaP pool: {len(pool)} configs (const_sf={args.const_sf})")
 
     results = {}
     for method in ("ga", "map", "map+ga"):
-        r = run_dse(spec, ds, method, settings=st, map_pool=pool, ref=ref)
+        r = run_dse(spec, ds, method, settings=st, map_pool=pool, ref=ref, app=app)
         results[method] = r
         print(f"{method:7s} hv_ppf={r.hv_ppf:.5g} hv_vpf={r.hv_vpf:.5g} "
               f"front={len(r.vpf_objs)} evals={r.n_evals} ({r.wall_s:.1f}s)")
 
     lib = fixed_library(spec)
-    objs = characterize(spec, lib).objectives()
-    max_b = args.const_sf * ds.metrics[BEHAV_KEY].max()
+    if app is not None:
+        objs = app.characterize_fn(spec, backend=args.backend)(lib)
+    else:
+        from repro.core.dataset import characterize
+
+        objs = characterize(spec, lib, backend=args.backend).objectives()
+    max_b = args.const_sf * ds.metrics[behav_key].max()
     max_p = args.const_sf * ds.metrics[PPA_KEY].max()
     feas = (objs[:, 0] <= max_b) & (objs[:, 1] <= max_p)
     hv_lib = hypervolume_2d(objs[feas], ref) if feas.any() else 0.0

@@ -5,6 +5,12 @@ product tables; PPA always remains the operator's PDPLUT.  All datasets are
 deterministic procedural surrogates (no network access) with the same task
 structure as the paper's: 1-D conv ECG peak detection, GEMV digit classification,
 2-D conv Gaussian smoothing, and a beyond-paper transformer-FFN block.
+
+Every application evaluates through two backends: ``backend="numpy"`` (the
+bit-exact oracle, default) and ``backend="jax"`` -- the accelerator-native
+engine in :mod:`repro.apps.fastapp` (device-resident product tables, batched
+table-matmul/conv primitives, a Pallas table-GEMV kernel).  fastapp is
+imported lazily so the numpy path stays JAX-free.
 """
 
 from .base import AxOApplication, quantize_int8, table_conv1d, table_conv2d, table_matmul

@@ -39,11 +39,23 @@ def quantize_int8(x: np.ndarray, n_bits: int = 8) -> tuple[np.ndarray, float]:
     return (q & ((1 << n_bits) - 1)).astype(np.int64), scale
 
 
-def table_matmul(table: np.ndarray, a_codes: np.ndarray, b_codes: np.ndarray) -> np.ndarray:
-    """(M, K) x (K, N) -> (M, N) int64 via product-table lookups."""
-    # gather (M, K, N) then reduce K; fine for the app-scale GEMVs used here.
-    prod = table[a_codes[:, :, None], b_codes[None, :, :]].astype(np.int64)
-    return prod.sum(axis=1)
+def table_matmul(
+    table: np.ndarray, a_codes: np.ndarray, b_codes: np.ndarray, k_chunk: int = 64
+) -> np.ndarray:
+    """(M, K) x (K, N) -> (M, N) int64 via product-table lookups.
+
+    The K reduction is chunked so the gather scratch stays (M, k_chunk, N)
+    instead of the full (M, K, N) product tensor; integer partial sums make the
+    result independent of ``k_chunk``.
+    """
+    m, k = a_codes.shape
+    n = b_codes.shape[1]
+    out = np.zeros((m, n), dtype=np.int64)
+    for lo in range(0, k, k_chunk):
+        hi = min(lo + k_chunk, k)
+        prod = table[a_codes[:, lo:hi, None], b_codes[None, lo:hi, :]].astype(np.int64)
+        out += prod.sum(axis=1)
+    return out
 
 
 def table_conv1d(table: np.ndarray, x_codes: np.ndarray, h_codes: np.ndarray) -> np.ndarray:
@@ -72,12 +84,35 @@ class AxOApplication:
         """(D, 2^N, 2^N) int32 product tables -> (D,) BEHAV values (minimized)."""
         raise NotImplementedError
 
+    def behav_jax_from_tables(self, tables) -> np.ndarray:
+        """(D, 2^N, 2^N) device product tables -> (D,) BEHAV (the jax engine).
+
+        Implemented per app on top of :mod:`repro.apps.fastapp`; the numpy
+        ``behav_from_tables`` stays the bit-exact oracle.
+        """
+        raise NotImplementedError(f"no jax BEHAV engine for app {self.name!r}")
+
     # -- conveniences used by the DSE layer ---------------------------------
 
     def behav_metric_name(self) -> str:
         return f"APP_{self.name.upper()}"
 
-    def behav(self, spec: OperatorSpec, configs: np.ndarray, batch: int = 128) -> np.ndarray:
+    def behav(
+        self,
+        spec: OperatorSpec,
+        configs: np.ndarray,
+        batch: int = 128,
+        backend: str = "numpy",
+    ) -> np.ndarray:
+        """(D, L) configs -> (D,) BEHAV.  ``backend="jax"`` builds the product
+        tables on device and scores them through the fastapp engine; the
+        default ``"numpy"`` path is the oracle."""
+        if backend == "jax":
+            from .fastapp import app_behav_jax  # lazy: keeps numpy path JAX-free
+
+            return app_behav_jax(self, spec, configs, batch=batch)
+        if backend != "numpy":
+            raise ValueError(f"unknown backend {backend!r}")
         configs = np.atleast_2d(np.asarray(configs))
         out = np.empty(len(configs), dtype=np.float64)
         for lo in range(0, len(configs), batch):
@@ -89,18 +124,22 @@ class AxOApplication:
     def accurate_behav(self, spec: OperatorSpec) -> float:
         return float(self.behav(spec, accurate_config(spec)[None])[0])
 
-    def characterized_dataset(self, spec: OperatorSpec, base: Dataset) -> Dataset:
+    def characterized_dataset(
+        self, spec: OperatorSpec, base: Dataset, backend: str = "numpy"
+    ) -> Dataset:
         """Attach this app's BEHAV metric to an existing characterized dataset."""
         metrics = dict(base.metrics)
-        metrics[self.behav_metric_name()] = self.behav(spec, base.configs)
+        metrics[self.behav_metric_name()] = self.behav(spec, base.configs, backend=backend)
         return Dataset(configs=base.configs, metrics=metrics, source=base.source)
 
-    def characterize_fn(self, spec: OperatorSpec, ppa_key: str = "PDPLUT"):
+    def characterize_fn(
+        self, spec: OperatorSpec, ppa_key: str = "PDPLUT", backend: str = "numpy"
+    ):
         """(D, L) -> (D, 2) [app BEHAV, operator PPA] for dse.run_dse."""
 
         def fn(configs: np.ndarray) -> np.ndarray:
-            ds = characterize(spec, configs)
-            b = self.behav(spec, configs)
+            ds = characterize(spec, configs, backend=backend)
+            b = self.behav(spec, configs, backend=backend)
             return np.stack([b, ds.metrics[ppa_key]], axis=-1)
 
         return fn

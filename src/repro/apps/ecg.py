@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.operator_model import exact_product_table
 from .base import AxOApplication, quantize_int8, table_conv1d
 
 __all__ = ["ECGPeakDetection"]
@@ -91,38 +92,62 @@ class ECGPeakDetection(AxOApplication):
         self._ref_peaks = None
         self._prep_bits = n_bits
 
+    def _peaks_from_signal(self, y: np.ndarray) -> np.ndarray:
+        return _detect_peaks(y.astype(np.float64), min_dist=int(0.4 * self.fs))
+
     def _peaks_for_table(self, table: np.ndarray) -> np.ndarray:
-        y = table_conv1d(table, self._x_codes, self._h_codes).astype(np.float64)
-        return _detect_peaks(y, min_dist=int(0.4 * self.fs))
+        return self._peaks_from_signal(table_conv1d(table, self._x_codes, self._h_codes))
 
     def set_reference(self, accurate_table: np.ndarray) -> None:
         self._ref_peaks = self._peaks_for_table(accurate_table)
+
+    def _ensure_reference(self) -> None:
+        if self._ref_peaks is None:
+            # reference = exact integer arithmetic (== accurate operator, tested)
+            self.set_reference(exact_product_table(self._prep_bits))
+
+    def _match_score(self, got: np.ndarray) -> float:
+        """Greedy strongest-first peak matching -> missed+spurious percentage."""
+        ref = self._ref_peaks
+        matched = 0
+        used = np.zeros(len(got), dtype=bool)
+        for p in ref:
+            if len(got) == 0:
+                break
+            j = int(np.argmin(np.abs(got - p) + 1e9 * used))
+            if not used[j] and abs(int(got[j]) - int(p)) <= self.match_tol:
+                used[j] = True
+                matched += 1
+        missed = len(ref) - matched
+        spurious = len(got) - matched
+        return 100.0 * (missed + spurious) / max(len(ref), 1)
 
     def behav_from_tables(self, tables: np.ndarray) -> np.ndarray:
         tables = np.asarray(tables)
         if tables.ndim == 2:
             tables = tables[None]
         self._prepare(int(tables.shape[-1]).bit_length() - 1)
-        if self._ref_peaks is None:
-            # reference = exact integer arithmetic (== accurate operator, tested)
-            n = tables.shape[-1]
-            u = np.arange(n)
-            v = np.where(u >= n // 2, u - n, u)
-            self.set_reference(np.multiply.outer(v, v).astype(np.int64))
-        ref = self._ref_peaks
+        self._ensure_reference()
         out = np.empty(len(tables), dtype=np.float64)
         for d, tab in enumerate(tables):
-            got = self._peaks_for_table(tab)
-            matched = 0
-            used = np.zeros(len(got), dtype=bool)
-            for p in ref:
-                if len(got) == 0:
-                    break
-                j = int(np.argmin(np.abs(got - p) + 1e9 * used))
-                if not used[j] and abs(int(got[j]) - int(p)) <= self.match_tol:
-                    used[j] = True
-                    matched += 1
-            missed = len(ref) - matched
-            spurious = len(got) - matched
-            out[d] = 100.0 * (missed + spurious) / max(len(ref), 1)
+            out[d] = self._match_score(self._peaks_for_table(tab))
         return out
+
+    def behav_jax_from_tables(self, tables) -> np.ndarray:
+        """Device batched FIR filtering; peak picking/matching stays on host.
+
+        The filtered signal is an exact integer convolution, so the device
+        batch equals the per-table numpy path bit-for-bit; the tiny sequential
+        greedy matching (dozens of candidates) reuses the oracle code, making
+        the count-based score identical across backends.
+        """
+        from .fastapp import _as_batch, table_conv1d_jax  # lazy JAX import
+
+        batch = _as_batch(tables)
+        self._prepare(batch.n_bits)
+        self._ensure_reference()
+        y = np.asarray(table_conv1d_jax(batch, self._x_codes, self._h_codes))
+        return np.array(
+            [self._match_score(self._peaks_from_signal(yd)) for yd in y],
+            dtype=np.float64,
+        )

@@ -1,0 +1,476 @@
+"""Accelerator-native application-BEHAV engine (the apps' ``backend="jax"`` path).
+
+The numpy application substrate scores a ``(D, L)`` config batch one product
+table at a time: ``AxOApplication.behav`` builds ``(D, 2^N, 2^N)`` tables on
+the host and each app loops D python iterations of fancy-indexed gathers.
+After the fastchar engine (PR 1) removed operator-level characterization from
+the DSE critical path, this loop dominates every ``run_dse`` with an
+application objective.  This module evaluates the same app pipelines in a
+handful of device dispatches built around three interchangeable table-
+arithmetic implementations:
+
+  ``impl="gemm"`` (default off-TPU) -- **pair-plane masked GEMM**.  The
+      operator's row structure gives ``T_d[a, b] = sum_r 4^r S_d[r,
+      pair_r(a), b]`` with ``pair_r(a)`` one of 4 values, so a table-matmul
+      collapses to R dense f32 GEMMs against the *tiny* per-row config tables
+      (``fastchar``'s ``(R, D, 4, 2^N)`` gather) -- no per-element table
+      lookups and no full product tables at all.  Every intermediate is an
+      integer below 2^24, so the f32 GEMMs are bit-exact (asserted in tests).
+  ``impl="xla"`` -- flattened ``jnp.take`` gathers + integer reductions over
+      device-resident product tables, tiled over cache-sized config chunks
+      with ``lax.map`` like ``fastchar.behav_partials``.  Per-config operand
+      codes (the FFN's re-quantized activations) always take this path.
+  ``impl="pallas"`` (default on TPU for config-shared matmuls) -- the batched
+      table-GEMV kernel in ``kernels.app_kernels`` that keeps each config's
+      table VMEM-resident across the K reduction (interpret-mode on CPU).
+
+Per-app BEHAV heads combine integer device outputs (logit argmax mismatch
+counts, filtered signals, conv outputs) on the host in float64 with exactly
+the oracle's expressions, which keeps every app BEHAV metric bit-identical to
+the numpy path (count-based *and* float).
+
+Everything is opt-in: importing this module pulls in JAX; ``repro.apps``
+modules import it lazily when a caller passes ``backend="jax"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fastchar import _device_tables, _gather_small
+from ..core.operator_model import OperatorSpec, config_to_masks, spec_for
+
+__all__ = [
+    "TableBatch",
+    "table_batch",
+    "default_matmul_impl",
+    "product_tables_jax",
+    "table_matmul_jax",
+    "table_conv1d_jax",
+    "table_conv2d_jax",
+    "mismatch_counts",
+    "app_behav_jax",
+]
+
+MATMUL_IMPLS = ("gemm", "xla", "pallas")
+
+
+def default_matmul_impl() -> str:
+    """Pallas table-GEMV on TPU, pair-plane GEMM elsewhere (interpret-mode
+    Pallas is a correctness twin, not a CPU fast path)."""
+    from ..kernels.ops import on_tpu
+
+    return "pallas" if on_tpu() else "gemm"
+
+
+# ---------------------------------------------------------------------------
+# Device-resident tables
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _tables_from_small(small: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """(R, D, 4, B) per-row tables -> (D, 2^N, 2^N) int32 product tables."""
+    spec = spec_for(n_bits)
+    _, _, _, pair_idx = _device_tables(n_bits)
+    approx = None
+    for r in range(spec.rows):
+        term = jnp.take(small[r], pair_idx[r], axis=1) << (2 * r)  # (D, A, B)
+        approx = term if approx is None else approx + term
+    return approx
+
+
+@dataclass
+class TableBatch:
+    """A config batch on device: per-row tables now, full tables on demand.
+
+    ``small`` (the ``(R, D, 4, 2^N)`` per-row config tables, ~4096 ints per
+    config) feeds the pair-plane GEMM paths; the full ``(D, 2^N, 2^N)``
+    product tables are only reconstructed when a gather/Pallas path asks.
+    """
+
+    masks: jnp.ndarray | None        # (D, R) int32, None when built from tables
+    n_bits: int
+    _small: jnp.ndarray | None = field(default=None, repr=False)
+    _tables: jnp.ndarray | None = field(default=None, repr=False)
+
+    def __len__(self) -> int:
+        src = self.masks if self.masks is not None else self._tables
+        return src.shape[0]
+
+    @property
+    def n_codes(self) -> int:
+        return 1 << self.n_bits
+
+    @property
+    def small(self) -> jnp.ndarray:
+        if self._small is None:
+            if self.masks is None:
+                raise ValueError(
+                    "TableBatch built from raw product tables has no per-row "
+                    "tables; construct it with table_batch(spec, configs) to "
+                    "use the pair-plane GEMM paths"
+                )
+            self._small = _gather_small(self.masks, self.n_bits)
+        return self._small
+
+    @property
+    def has_small(self) -> bool:
+        return self._small is not None or self.masks is not None
+
+    @property
+    def tables(self) -> jnp.ndarray:
+        if self._tables is None:
+            self._tables = _tables_from_small(self.small, self.n_bits)
+        return self._tables
+
+
+def table_batch(spec: OperatorSpec, configs: np.ndarray) -> TableBatch:
+    """(D, L) {0,1} configs -> device TableBatch for this operator family."""
+    configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
+    masks = jnp.asarray(config_to_masks(spec, configs).astype(np.int32))
+    return TableBatch(masks=masks, n_bits=spec.n_bits)
+
+
+def _as_batch(tables) -> TableBatch:
+    if isinstance(tables, TableBatch):
+        return tables
+    tables = jnp.asarray(tables, jnp.int32)
+    if tables.ndim == 2:  # single table, like the numpy behav_from_tables
+        tables = tables[None]
+    n_bits = int(tables.shape[-1]).bit_length() - 1
+    return TableBatch(masks=None, n_bits=n_bits, _tables=tables)
+
+
+def product_tables_jax(spec: OperatorSpec, configs: np.ndarray) -> jnp.ndarray:
+    """(D, L) {0,1} configs -> device (D, 2^N, 2^N) int32 product tables.
+
+    Bit-identical to ``operator_model.product_tables`` (same row tables, same
+    carry-truncation semantics; parity is asserted in tests).
+    """
+    return table_batch(spec, configs).tables
+
+
+# ---------------------------------------------------------------------------
+# Pair-plane GEMM cores (impl="gemm")
+# ---------------------------------------------------------------------------
+#
+# f32 exactness: every GEMM operand/partial is an integer of magnitude at most
+# K * max|S_r| = K * 2^(n_bits+1) (guarded < 2^24 by _gemm_ok), and the int32
+# combine of the <= R shifted row results stays below 2^31.
+
+
+def _gemm_ok(k: int, n_bits: int) -> bool:
+    return k * (1 << (n_bits + 1)) < (1 << 24)
+
+
+def _pair_planes(a: jnp.ndarray, k: int, r: int) -> jnp.ndarray:
+    """(..., K) codes -> (..., 4K) f32 one-hot over (pair_r(code), k)."""
+    pair = 2 * ((a >> (2 * r)) & 1) + ((a >> (2 * r + 1)) & 1)
+    q = pair * k + jnp.arange(k, dtype=jnp.int32)
+    lead = a.shape[:-1]
+    onehot = jnp.zeros(lead + (4 * k,), jnp.float32)
+    idx = tuple(
+        jnp.arange(s).reshape((1,) * i + (-1,) + (1,) * (len(lead) - i))
+        for i, s in enumerate(lead)
+    )
+    return onehot.at[idx + (q,)].set(1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _matmul_gemm(small, a, b, n_bits: int):
+    """small (R, D, 4, B); a (M, K); b (K, N) -> (D, M, N) int32."""
+    spec = spec_for(n_bits)
+    d = small.shape[1]
+    k = a.shape[1]
+    n = b.shape[1]
+    out = None
+    for r in range(spec.rows):
+        a1 = _pair_planes(a, k, r)                              # (M, 4K)
+        w = jnp.take(small[r], b, axis=2).reshape(d, 4 * k, n)  # (D, 4K, N)
+        res = jnp.einsum("mq,dqn->dmn", a1, w.astype(jnp.float32))
+        term = res.astype(jnp.int32) << (2 * r)
+        out = term if out is None else out + term
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _contract_gemm_flat(small, a, bvec, n_bits: int):
+    """small (R, D, 4, B); a (M, K) windows; bvec (K,) taps -> (D, M) int32.
+
+    The N=1 table-matmul (every conv is one): a single (D, 4K) x (4K, M) GEMM
+    per row instead of the batched einsum.
+    """
+    spec = spec_for(n_bits)
+    d = small.shape[1]
+    k = a.shape[1]
+    out = None
+    for r in range(spec.rows):
+        a1 = _pair_planes(a, k, r)                              # (M, 4K)
+        w = jnp.take(small[r], bvec, axis=2).reshape(d, 4 * k)  # (D, 4K)
+        res = w.astype(jnp.float32) @ a1.T                      # (D, M)
+        term = res.astype(jnp.int32) << (2 * r)
+        out = term if out is None else out + term
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flattened-gather cores (impl="xla")
+# ---------------------------------------------------------------------------
+
+
+def _pad_leading(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("d_chunk",))
+def _matmul_take_shared(tables, a, b, d_chunk: int):
+    """tables (D, A, B); a (M, K); b (K, N) -> (D, M, N) int32.
+
+    (M, N, K) gather order keeps the K reduction contiguous in memory.
+    """
+    d, _, nb = tables.shape
+    m, k = a.shape
+    n = b.shape[1]
+    idx = (a[:, None, :] * nb + b.T[None, :, :]).reshape(-1)   # (M*N*K,)
+    tf = tables.reshape(d // d_chunk, d_chunk, -1)
+
+    def chunk(tc):  # (Dc, A*B) -> (Dc, M, N)
+        prod = jnp.take(tc, idx, axis=1)
+        return prod.reshape(d_chunk, m, n, k).sum(axis=-1)
+
+    return jax.lax.map(chunk, tf).reshape(d, m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("d_chunk",))
+def _matmul_take_batched(tables, a, b, d_chunk: int):
+    """tables (D, A, B); a (D, M, K) per-config codes; b (K, N) -> (D, M, N)."""
+    d, _, nb = tables.shape
+    _, m, k = a.shape
+    n = b.shape[1]
+    tf = tables.reshape(d // d_chunk, d_chunk, -1)
+    af = a.reshape(d // d_chunk, d_chunk, m, k)
+
+    def chunk(args):
+        tc, ac = args
+        idx = (ac[:, :, :, None] * nb + b[None, None, :, :]).reshape(d_chunk, -1)
+        prod = jnp.take_along_axis(tc, idx, axis=1)
+        return prod.reshape(d_chunk, m, k, n).sum(axis=2)
+
+    return jax.lax.map(chunk, (tf, af)).reshape(d, m, n)
+
+
+def _windows_1d(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(T,) -> (T-k+1, k) valid-mode sliding windows."""
+    t = x.shape[0]
+    return x[jnp.arange(t - k + 1)[:, None] + jnp.arange(k)[None, :]]
+
+
+def _windows_2d(img: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """(H, W) -> (H-kh+1, W-kw+1, kh, kw) valid-mode sliding windows."""
+    h, w = img.shape
+    oy, ox = h - kh + 1, w - kw + 1
+    return img[
+        jnp.arange(oy)[:, None, None, None] + jnp.arange(kh)[None, None, :, None],
+        jnp.arange(ox)[None, :, None, None] + jnp.arange(kw)[None, None, None, :],
+    ]
+
+
+@jax.jit
+def _conv1d_take(tables, x, h):
+    d, _, nb = tables.shape
+    t, k = x.shape[0], h.shape[0]
+    win = _windows_1d(x, k)                                 # (T', k)
+    idx = (win * nb + h[None, :]).reshape(-1)
+    prod = jnp.take(tables.reshape(d, -1), idx, axis=1)
+    return prod.reshape(d, t - k + 1, k).sum(axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("d_chunk",))
+def _conv2d_take(tables, img, kern, d_chunk: int):
+    d, _, nb = tables.shape
+    kh, kw = kern.shape
+    win = _windows_2d(img, kh, kw)                          # (oy, ox, kh, kw)
+    oy, ox = win.shape[0], win.shape[1]
+    idx = (win * nb + kern[None, None, :, :]).reshape(-1)
+    tf = tables.reshape(d // d_chunk, d_chunk, -1)
+
+    def chunk(tc):
+        prod = jnp.take(tc, idx, axis=1)
+        return prod.reshape(d_chunk, oy, ox, kh * kw).sum(axis=-1)
+
+    return jax.lax.map(chunk, tf).reshape(d, oy, ox)
+
+
+# ---------------------------------------------------------------------------
+# Public primitives
+# ---------------------------------------------------------------------------
+
+
+def _resolve_impl(impl: str | None, batch: TableBatch, k: int) -> str:
+    explicit = impl is not None
+    impl = default_matmul_impl() if impl is None else impl
+    if impl not in MATMUL_IMPLS:
+        raise ValueError(f"unknown fastapp impl {impl!r}")
+    if impl == "gemm" and not (batch.has_small and _gemm_ok(k, batch.n_bits)):
+        if explicit:  # never silently hand back a different impl than asked for
+            raise ValueError(
+                "impl='gemm' unavailable: "
+                + (
+                    f"K={k} exceeds the f32-exactness bound for {batch.n_bits}-bit"
+                    if batch.has_small
+                    else "TableBatch built from raw tables has no per-row tables"
+                )
+            )
+        impl = "xla"  # auto-selection falls back to the gather path
+    return impl
+
+
+def table_matmul_jax(
+    tables,
+    a_codes,
+    b_codes,
+    d_chunk: int = 8,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Batched table matmul: (D, M, N) int32, every multiply a table lookup.
+
+    ``tables`` is a ``TableBatch`` (preferred: enables the pair-plane GEMM
+    path) or a raw ``(D, 2^N, 2^N)`` array.  ``a_codes`` is ``(M, K)`` (shared
+    across configs) or ``(D, M, K)`` (per-config, e.g. the re-quantized hidden
+    activations of the FFN app -- always the XLA gather path).
+    """
+    batch = _as_batch(tables)
+    a = jnp.asarray(a_codes, jnp.int32)
+    b = jnp.asarray(b_codes, jnp.int32)
+    d = len(batch)
+    impl = _resolve_impl(impl, batch, a.shape[-1])
+
+    if a.ndim == 2 and impl == "gemm":
+        return _matmul_gemm(batch.small, a, b, batch.n_bits)
+
+    if a.ndim == 2 and impl == "pallas":
+        from ..kernels.app_kernels import table_gemv_pallas
+        from ..kernels.ops import on_tpu
+
+        interpret = (not on_tpu()) if interpret is None else interpret
+        k = a.shape[1]
+        k_tile = min(64, k)
+        pad = (-k) % k_tile
+        if pad:  # zero codes index table[0, 0] == 0: padding adds nothing
+            a = jnp.concatenate([a, jnp.zeros((a.shape[0], pad), jnp.int32)], axis=1)
+            b = jnp.concatenate([b, jnp.zeros((pad, b.shape[1]), jnp.int32)], axis=0)
+        return table_gemv_pallas(
+            batch.tables.reshape(d, -1), a, b, k_tile=k_tile, interpret=interpret
+        )
+
+    d_chunk = min(d_chunk, d)
+    tp = _pad_leading(batch.tables, d_chunk)
+    if a.ndim == 3:
+        out = _matmul_take_batched(tp, _pad_leading(a, d_chunk), b, d_chunk)
+    else:
+        out = _matmul_take_shared(tp, a, b, d_chunk)
+    return out[:d]
+
+
+def table_conv1d_jax(tables, x_codes, h_codes, impl: str | None = None) -> jnp.ndarray:
+    """Valid-mode 1-D correlation through per-config tables: (D, T-k+1) int32."""
+    batch = _as_batch(tables)
+    x = jnp.asarray(x_codes, jnp.int32)
+    h = jnp.asarray(h_codes, jnp.int32)
+    impl = _resolve_impl(impl, batch, h.shape[0])
+    if impl == "gemm":
+        win = _windows_1d(x, h.shape[0])
+        return _contract_gemm_flat(batch.small, win, h, batch.n_bits)
+    return _conv1d_take(batch.tables, x, h)
+
+
+def table_conv2d_jax(
+    tables, img_codes, k_codes, d_chunk: int = 16, impl: str | None = None
+) -> jnp.ndarray:
+    """Valid-mode 2-D convolution through per-config tables: (D, H', W') int32."""
+    batch = _as_batch(tables)
+    img = jnp.asarray(img_codes, jnp.int32)
+    kern = jnp.asarray(k_codes, jnp.int32)
+    impl = _resolve_impl(impl, batch, int(kern.size))
+    if impl == "gemm":
+        kh, kw = kern.shape
+        win = _windows_2d(img, kh, kw)
+        oy, ox = win.shape[0], win.shape[1]
+        out = _contract_gemm_flat(
+            batch.small, win.reshape(oy * ox, kh * kw), kern.reshape(-1), batch.n_bits
+        )
+        return out.reshape(len(batch), oy, ox)
+    d = len(batch)
+    d_chunk = min(d_chunk, d)
+    out = _conv2d_take(_pad_leading(batch.tables, d_chunk), img, kern, d_chunk)
+    return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# Jitted BEHAV heads
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _argmax_mismatch(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """(D, S, C) integer logits -> (D,) int32 misclassification counts."""
+    return jnp.sum(jnp.argmax(logits, axis=-1) != labels[None, :], axis=-1)
+
+
+def mismatch_counts(
+    tables, x_codes, w_codes, labels, d_chunk: int = 8,
+    impl: str | None = None, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Classification head: table-GEMV logits -> per-config mismatch counts.
+
+    Integer argmax over integer logits breaks ties exactly like the numpy
+    oracle (first maximum), so the resulting error *counts* are bit-identical.
+    """
+    logits = table_matmul_jax(
+        tables, x_codes, w_codes, d_chunk=d_chunk, impl=impl, interpret=interpret
+    )
+    return _argmax_mismatch(logits, jnp.asarray(np.asarray(labels), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Batch driver
+# ---------------------------------------------------------------------------
+
+
+def app_behav_jax(
+    app, spec: OperatorSpec, configs: np.ndarray, batch: int = 128
+) -> np.ndarray:
+    """(D, L) configs -> (D,) app BEHAV through the device engine.
+
+    ``batch`` configs at a time are staged as a device ``TableBatch`` and
+    handed to the app's ``behav_jax_from_tables`` head; chunking bounds the
+    device working set (a (128, 256, 256) int32 table batch is ~33 MB at N=8)
+    exactly like the numpy ``AxOApplication.behav`` batching.  Chunks are
+    padded up to power-of-two buckets (capped at ``batch``) so the jitted
+    kernels compile at most ~log2(batch) distinct D shapes across a whole DSE
+    run, however ragged the validated fronts get.
+    """
+    configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
+    d = len(configs)
+    out = np.empty(d, dtype=np.float64)
+    for lo in range(0, d, batch):
+        hi = min(lo + batch, d)
+        cfgs = configs[lo:hi]
+        bucket = min(batch, 1 << max(len(cfgs) - 1, 1).bit_length())
+        pad = bucket - len(cfgs)
+        if pad:
+            cfgs = np.concatenate([cfgs, np.zeros((pad, cfgs.shape[1]), np.uint8)])
+        vals = app.behav_jax_from_tables(table_batch(spec, cfgs))
+        out[lo:hi] = vals[: hi - lo]
+    return out

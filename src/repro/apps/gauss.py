@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.operator_model import exact_product_table
 from .base import AxOApplication, quantize_int8, table_conv2d
 
 __all__ = ["GaussianSmoothing"]
@@ -77,22 +78,44 @@ class GaussianSmoothing(AxOApplication):
         self._psnr_accurate = None
         self._prep_bits = n_bits
 
+    def _psnr_from_int(self, y: np.ndarray) -> float:
+        """Exact integer conv output -> PSNR vs the float reference (f64 host math)."""
+        return _psnr(y.astype(np.float64) * self._scale, self._float_ref, peak=1.0)
+
     def _psnr_for_table(self, table: np.ndarray) -> float:
-        y = table_conv2d(table, self._img_codes, self._k_codes).astype(np.float64)
-        return _psnr(y * self._scale, self._float_ref, peak=1.0)
+        return self._psnr_from_int(table_conv2d(table, self._img_codes, self._k_codes))
+
+    def _ensure_accurate_psnr(self) -> None:
+        if self._psnr_accurate is None:
+            self._psnr_accurate = self._psnr_for_table(
+                exact_product_table(self._prep_bits)
+            )
 
     def behav_from_tables(self, tables: np.ndarray) -> np.ndarray:
         tables = np.asarray(tables)
         if tables.ndim == 2:
             tables = tables[None]
         self._prepare(int(tables.shape[-1]).bit_length() - 1)
-        if self._psnr_accurate is None:
-            n = tables.shape[-1]
-            u = np.arange(n)
-            v = np.where(u >= n // 2, u - n, u)
-            exact = np.multiply.outer(v, v).astype(np.int64)
-            self._psnr_accurate = self._psnr_for_table(exact)
+        self._ensure_accurate_psnr()
         out = np.empty(len(tables), dtype=np.float64)
         for d, tab in enumerate(tables):
             out[d] = self._psnr_accurate - self._psnr_for_table(tab)
         return out
+
+    def behav_jax_from_tables(self, tables) -> np.ndarray:
+        """Device batched table-conv2d; the PSNR combine stays in host float64.
+
+        The conv output is exact integer arithmetic (identical to the numpy
+        path), and the float64 PSNR reduction reuses the oracle expression, so
+        AVG_PSNR_RED matches bit-for-bit across backends.
+        """
+        from .fastapp import _as_batch, table_conv2d_jax  # lazy JAX import
+
+        batch = _as_batch(tables)
+        self._prepare(batch.n_bits)
+        self._ensure_accurate_psnr()
+        y = np.asarray(table_conv2d_jax(batch, self._img_codes, self._k_codes))
+        return np.array(
+            [self._psnr_accurate - self._psnr_from_int(yd) for yd in y],
+            dtype=np.float64,
+        )

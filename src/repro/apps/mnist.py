@@ -103,3 +103,19 @@ class DigitClassification(AxOApplication):
             pred = logits.argmax(axis=1)
             out[d] = 100.0 * (pred != self._labels).mean()
         return out
+
+    def behav_jax_from_tables(self, tables) -> np.ndarray:
+        """Batched device GEMV + argmax head: error rates for a table batch.
+
+        Integer logits and first-maximum argmax ties match the oracle, so the
+        misclassification counts -- and hence the error percentages -- are
+        bit-identical across backends.
+        """
+        from .fastapp import _as_batch, mismatch_counts  # lazy JAX import
+
+        batch = _as_batch(tables)
+        self._prepare(batch.n_bits)
+        wrong = np.asarray(
+            mismatch_counts(batch, self._x_codes, self._w_codes, self._labels)
+        ).astype(np.float64)
+        return 100.0 * (wrong / len(self._labels))

@@ -180,8 +180,12 @@ def build_training_dataset(
     include_pattern: bool = True,
     cache_path: str | None = None,
     include_accurate: bool = True,
+    backend: str = "numpy",
 ) -> Dataset:
-    """RANDOM + PATTERN training dataset (cached to ``cache_path`` if given)."""
+    """RANDOM + PATTERN training dataset (cached to ``cache_path`` if given).
+
+    ``backend`` is forwarded to :func:`characterize` for the BEHAV half.
+    """
     if cache_path is not None and os.path.exists(cache_path):
         return Dataset.load(cache_path)
 
@@ -202,7 +206,7 @@ def build_training_dataset(
     idx = np.sort(idx)
     configs, source = configs[idx], source[idx]
 
-    ds = characterize(spec, configs)
+    ds = characterize(spec, configs, backend=backend)
     ds.source = source
     if cache_path is not None:
         os.makedirs(os.path.dirname(cache_path) or ".", exist_ok=True)

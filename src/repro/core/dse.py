@@ -71,6 +71,13 @@ class DSESettings:
     n_estimator_quad: int = 48
     backend: str = "numpy"
 
+    def __post_init__(self) -> None:
+        # fail at construction, not deep inside characterize with an opaque error
+        if self.backend not in ("numpy", "jax"):
+            raise ValueError(
+                f"backend must be 'numpy' or 'jax', got {self.backend!r}"
+            )
+
 
 @dataclass
 class DSEResult:
@@ -247,14 +254,21 @@ def run_dse(
     map_pool: np.ndarray | None = None,
     characterize_fn: Callable[[np.ndarray], np.ndarray] | None = None,
     ref: np.ndarray | None = None,
+    app=None,
 ) -> DSEResult:
     """One full DSE run (one method, one const_sf).
 
     ``characterize_fn`` maps (D, L) configs -> (D, 2) true [BEHAV, PPA]; defaults to
     the operator-level exhaustive characterization.  Pass an application's objective
-    function for application-specific DSE.
+    function for application-specific DSE -- or pass the ``repro.apps`` application
+    itself as ``app``, which builds that objective with ``settings.backend``
+    forwarded (the accelerator-native app engine under ``backend="jax"``).
     """
     settings = settings or DSESettings()
+    if app is not None and characterize_fn is None:
+        characterize_fn = app.characterize_fn(
+            spec, ppa_key=settings.ppa_key, backend=settings.backend
+        )
     t0 = time.time()
     if estimators is None:
         estimators = fit_estimators(

@@ -1,0 +1,93 @@
+"""Pallas batched table-GEMV kernel for the application-BEHAV engine (fastapp).
+
+Application BEHAV turns a batch of approximate-operator product tables into
+app-level quality metrics; its hot loop is integer matmul where every multiply
+is a table lookup: ``out[d, m, n] = sum_k T_d[a[m, k], b[k, n]]``.  The XLA
+path in :mod:`repro.apps.fastapp` gathers a ``(Dc, M, K, N)`` product tensor
+per config chunk; this kernel instead keeps one config's *flattened* product
+table resident in VMEM across the whole K reduction and never materializes the
+product tensor in HBM.
+
+Grid layout (mirroring ``char_kernels.behav_stats_pallas``):
+
+  grid = (D, K // k_tile); step ``(d, k)`` loads
+    table block  (1, A*B)      index (d, 0)   -- constant in k: the per-config
+                                                 table stays in VMEM across the
+                                                 K reduction.
+    a block      (M, k_tile)   index (0, k)   -- operand codes, shared over D.
+    b block      (k_tile, N)   index (k, 0)
+  and accumulates the partial (M, N) integer product into the (1, M, N) output
+  block (revision-in-place over the k grid axis, ``@pl.when(k == 0)`` init).
+
+The lookup itself is one flat ``jnp.take``: ``idx = a * B + b`` broadcast to
+(M, k_tile, N).  Accumulation is int32: the approximate product magnitude is
+bounded by ``fastchar.max_abs_error_bound + 2^{2N-2}`` (< 2^16 for N=8), so
+K <= 2^14 reductions stay exactly representable.
+
+Callers must pad K to a multiple of ``k_tile`` with zero codes: code 0 is the
+operand value 0 and every config's table maps (0, 0) -> 0, so padding
+contributes nothing to the sums (asserted in tests).  Interpret mode (the
+CPU default, see ``kernels.ops.on_tpu``) validates the kernel bit-for-bit
+against the XLA path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["table_gemv_pallas"]
+
+
+def _kernel(tab_ref, a_ref, b_ref, out_ref, *, n_codes: int):
+    """One (d, k) step: gather the (M, kt, N) product tile, reduce, accumulate."""
+    k = pl.program_id(1)
+    idx = a_ref[...][:, :, None] * n_codes + b_ref[...][None, :, :]  # (M, kt, N)
+    prod = jnp.take(tab_ref[0], idx.reshape(-1), axis=0).reshape(idx.shape)
+    part = prod.sum(axis=1)[None]                                    # (1, M, N)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "interpret"))
+def table_gemv_pallas(
+    tables_flat: jnp.ndarray,     # (D, A*B) int32 flattened product tables
+    a_codes: jnp.ndarray,         # (M, K) int32 operand-A codes (config-shared)
+    b_codes: jnp.ndarray,         # (K, N) int32 operand-B codes
+    k_tile: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched table-matmul: (D, M, N) int32, table VMEM-resident over K.
+
+    K must divide by ``k_tile`` (fastapp pads the codes with zeros).
+    """
+    d, ab = tables_flat.shape
+    m, k = a_codes.shape
+    k2, n = b_codes.shape
+    assert k == k2, (k, k2)
+    assert k % k_tile == 0, (k, k_tile)
+    n_codes = int(round(ab ** 0.5))
+    assert n_codes * n_codes == ab, ab
+
+    grid = (d, k // k_tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_codes=n_codes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ab), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, k_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((k_tile, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m, n), jnp.int32),
+        interpret=interpret,
+    )(tables_flat, a_codes, b_codes)

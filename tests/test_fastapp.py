@@ -1,0 +1,285 @@
+"""fastapp parity: the JAX application-BEHAV engine vs the numpy oracle.
+
+The engine promises *bit-identical* BEHAV for count-based app metrics (MNIST
+error rate, ECG peak score) and <= 1e-6 agreement for float metrics (gauss
+AVG_PSNR_RED, FFN relative L2) -- in practice the float metrics are also
+bit-identical because every device output is exact integer arithmetic and the
+float combines reuse the oracle's host expressions.  Parity is exercised
+exhaustively: all 1024 configs of the 4x4 operator for each of the four apps.
+"""
+
+import numpy as np
+import pytest
+
+from repro.apps import APPLICATIONS
+from repro.apps.fastapp import (
+    TableBatch,
+    app_behav_jax,
+    mismatch_counts,
+    product_tables_jax,
+    table_batch,
+    table_conv1d_jax,
+    table_conv2d_jax,
+    table_matmul_jax,
+)
+from repro.core.dataset import gen_random
+from repro.core.miqcp import _all_configs
+from repro.core.operator_model import accurate_config, product_tables, spec_for
+
+# Small app instances keep the 1024-config numpy oracle sweeps fast while
+# exercising the same code paths as the paper-sized defaults.
+SMALL_APPS = {
+    "ecg": dict(n_samples=512),
+    "mnist": dict(side=8, n_train_per_class=12, n_test_per_class=6),
+    "gauss": dict(side=32),
+    "ffn": dict(d_model=16, d_ff=32, n_tokens=12),
+}
+COUNT_APPS = ("ecg", "mnist")     # count-based metrics: must be bit-identical
+FLOAT_APPS = ("gauss", "ffn")     # float metrics: <= 1e-6
+
+
+def small_app(name):
+    return APPLICATIONS[name](**SMALL_APPS[name])
+
+
+# ---------------------------------------------------------------------------
+# Device product tables
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_product_tables_device_parity(n_bits):
+    spec = spec_for(n_bits)
+    cfgs = np.concatenate(
+        [
+            gen_random(spec, 16, seed=0),
+            np.zeros((1, spec.n_luts), np.uint8),
+            accurate_config(spec)[None],
+        ]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(product_tables_jax(spec, cfgs)), product_tables(spec, cfgs)
+    )
+
+
+def test_table_batch_lazy_pieces():
+    spec = spec_for(4)
+    batch = table_batch(spec, gen_random(spec, 5, seed=1))
+    assert len(batch) == 5 and batch.n_bits == 4 and batch.n_codes == 16
+    assert batch.small.shape == (spec.rows, 5, 4, 16)
+    assert batch.tables.shape == (5, 16, 16)
+    # raw-tables batches cannot serve the pair-plane (small) paths
+    raw = TableBatch(masks=None, n_bits=4, _tables=batch.tables)
+    with pytest.raises(ValueError):
+        _ = raw.small
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive 4x4 backend parity, all four apps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(APPLICATIONS))
+def test_exhaustive_4x4_backend_parity(name):
+    """Every 4x4 config: the jax engine reproduces the oracle across the space."""
+    spec = spec_for(4)
+    cfgs = _all_configs(spec.n_luts)
+    app = small_app(name)
+    oracle = app.behav(spec, cfgs, backend="numpy")
+    fast = app.behav(spec, cfgs, backend="jax")
+    if name in COUNT_APPS:
+        np.testing.assert_array_equal(oracle, fast)
+    else:
+        np.testing.assert_allclose(fast, oracle, rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("name", sorted(APPLICATIONS))
+def test_degenerate_shapes(name):
+    """D=1 batches and single-sample datasets evaluate identically."""
+    spec = spec_for(8)
+    kwargs = dict(SMALL_APPS[name])
+    if name == "mnist":
+        kwargs["n_test_per_class"] = 1     # one sample per class
+    if name == "ffn":
+        kwargs["n_tokens"] = 1             # single-token dataset
+    if name == "ecg":
+        kwargs["n_samples"] = 300          # single reference peak
+    app = APPLICATIONS[name](**kwargs)
+    cfg = gen_random(spec, 1, seed=2)      # D=1
+    np.testing.assert_allclose(
+        app.behav(spec, cfg, backend="jax"),
+        app.behav(spec, cfg, backend="numpy"),
+        rtol=1e-6,
+        atol=1e-9,
+    )
+
+
+def test_behav_jax_batch_chunking_invariance():
+    """Results must not depend on the device batch chunking."""
+    spec = spec_for(4)
+    app = small_app("mnist")
+    cfgs = gen_random(spec, 37, seed=3)    # odd D
+    ref = app_behav_jax(app, spec, cfgs, batch=128)
+    for b in (8, 16, 37):
+        np.testing.assert_array_equal(ref, app_behav_jax(app, spec, cfgs, batch=b))
+
+
+def test_unknown_backend_raises():
+    spec = spec_for(4)
+    app = small_app("gauss")
+    with pytest.raises(ValueError):
+        app.behav(spec, accurate_config(spec)[None], backend="torch")
+
+
+# ---------------------------------------------------------------------------
+# Primitive impl parity: pair-plane GEMM vs XLA gathers vs Pallas GEMV
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def batch8():
+    spec = spec_for(8)
+    return spec, table_batch(spec, gen_random(spec, 6, seed=4))
+
+
+def test_matmul_impl_parity(batch8):
+    spec, batch = batch8
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, spec.n_inputs, (23, 100))   # K=100: pallas pads to 50|...
+    b = rng.integers(0, spec.n_inputs, (100, 7))
+    outs = {
+        impl: np.asarray(table_matmul_jax(batch, a, b, impl=impl, interpret=True))
+        for impl in ("gemm", "xla", "pallas")
+    }
+    np.testing.assert_array_equal(outs["gemm"], outs["xla"])
+    np.testing.assert_array_equal(outs["pallas"], outs["xla"])
+    # oracle cross-check on one config
+    from repro.apps.base import table_matmul
+
+    tab = np.asarray(batch.tables)[2]
+    np.testing.assert_array_equal(outs["xla"][2], table_matmul(tab, a, b))
+
+
+def test_matmul_per_config_codes(batch8):
+    spec, batch = batch8
+    rng = np.random.default_rng(6)
+    a = rng.integers(0, spec.n_inputs, (len(batch), 9, 33))
+    b = rng.integers(0, spec.n_inputs, (33, 5))
+    out = np.asarray(table_matmul_jax(batch, a, b))
+    tabs = np.asarray(batch.tables)
+    ref = np.stack(
+        [tabs[d][a[d][:, :, None], b[None, :, :]].sum(axis=1) for d in range(len(batch))]
+    )
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_conv_impl_parity(batch8):
+    spec, batch = batch8
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, spec.n_inputs, 200)
+    h = rng.integers(0, spec.n_inputs, 15)
+    img = rng.integers(0, spec.n_inputs, (24, 24))
+    k = rng.integers(0, spec.n_inputs, (5, 5))
+    np.testing.assert_array_equal(
+        np.asarray(table_conv1d_jax(batch, x, h, impl="gemm")),
+        np.asarray(table_conv1d_jax(batch, x, h, impl="xla")),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(table_conv2d_jax(batch, img, k, impl="gemm")),
+        np.asarray(table_conv2d_jax(batch, img, k, impl="xla")),
+    )
+    from repro.apps.base import table_conv1d, table_conv2d
+
+    tab = np.asarray(batch.tables)[0]
+    np.testing.assert_array_equal(
+        np.asarray(table_conv1d_jax(batch, x, h))[0], table_conv1d(tab, x, h)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(table_conv2d_jax(batch, img, k))[0], table_conv2d(tab, img, k)
+    )
+
+
+def test_mismatch_counts_all_impls(batch8):
+    spec, batch = batch8
+    app = APPLICATIONS["mnist"]()
+    app._prepare(spec.n_bits)
+    outs = [
+        np.asarray(
+            mismatch_counts(
+                batch, app._x_codes, app._w_codes, app._labels,
+                impl=impl, interpret=True,
+            )
+        )
+        for impl in ("gemm", "xla", "pallas")
+    ]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_unknown_impl_raises(batch8):
+    spec, batch = batch8
+    with pytest.raises(ValueError):
+        table_matmul_jax(batch, np.zeros((2, 4), int), np.zeros((4, 2), int), impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle: K-chunked matmul invariance
+# ---------------------------------------------------------------------------
+
+
+def test_numpy_table_matmul_k_chunk_invariance():
+    from repro.apps.base import table_matmul
+
+    spec = spec_for(4)
+    tab = product_tables(spec, gen_random(spec, 1, seed=8))[0]
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, spec.n_inputs, (11, 150))
+    b = rng.integers(0, spec.n_inputs, (150, 3))
+    ref = table_matmul(tab, a, b, k_chunk=150)
+    for kc in (1, 7, 64, 1000):
+        np.testing.assert_array_equal(ref, table_matmul(tab, a, b, k_chunk=kc))
+
+
+# ---------------------------------------------------------------------------
+# DSE wiring
+# ---------------------------------------------------------------------------
+
+
+def test_characterize_fn_backend(batch8):
+    spec = spec_for(4)
+    app = small_app("gauss")
+    cfgs = gen_random(spec, 5, seed=10)
+    out_np = app.characterize_fn(spec, backend="numpy")(cfgs)
+    out_jx = app.characterize_fn(spec, backend="jax")(cfgs)
+    np.testing.assert_allclose(out_jx[:, 0], out_np[:, 0], rtol=1e-6, atol=1e-9)
+    # operator PPA is shared numpy machinery: identical by construction
+    np.testing.assert_array_equal(out_jx[:, 1], out_np[:, 1])
+
+
+def test_run_dse_app_backend_smoke():
+    from repro.core.dataset import build_training_dataset
+    from repro.core.dse import DSESettings, run_dse
+
+    spec = spec_for(4)
+    app = small_app("mnist")
+    base = build_training_dataset(spec, n_random=120, seed=0)
+    ds = app.characterized_dataset(spec, base, backend="jax")
+    bkey = app.behav_metric_name()
+    np.testing.assert_array_equal(
+        ds.metrics[bkey], app.behav(spec, base.configs, backend="numpy")
+    )
+    st = DSESettings(
+        behav_key=bkey, const_sf=1.0, pop_size=12, n_gen=3, n_quad_grid=(0,),
+        pool_size=2, seed=0, backend="jax",
+    )
+    r = run_dse(spec, ds, "ga", settings=st, app=app)
+    assert r.hv_ppf >= 0.0 and r.hv_vpf >= 0.0 and r.n_evals > 0
+
+
+def test_dse_settings_backend_validated_eagerly():
+    from repro.core.dse import DSESettings
+
+    with pytest.raises(ValueError, match="backend must be 'numpy' or 'jax'"):
+        DSESettings(backend="torch")
+    for ok in ("numpy", "jax"):
+        assert DSESettings(backend=ok).backend == ok

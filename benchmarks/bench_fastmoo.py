@@ -1,0 +1,118 @@
+"""Device NSGA-II engine throughput: numpy oracle GA vs the fastmoo engine.
+
+The GA generation loop is the post-PR-1/2 serial bottleneck of ``run_dse``:
+even with the jitted surrogate (one fitness dispatch per generation), sorting,
+selection, crossover, mutation and environmental selection round-trip to host
+numpy.  Headline rows: wall-clock of a full surrogate-driven NSGA-II run on
+the 8-bit operator (L=36) for
+
+  * ``ga_numpy``  -- the numpy oracle end to end,
+  * ``ga_hybrid`` -- numpy GA + one-dispatch jit surrogate (the PR-1 path),
+  * ``ga_jax``    -- the whole run as one compiled dispatch (fastmoo),
+
+plus feasible-archive hypervolume parity between the oracle and the engine,
+and the multi-seed/multi-constraint sweep: N lanes as one vmapped dispatch vs
+the same lanes run back-to-back on the already-compiled single-run program.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.automl import fit_estimators
+from repro.core.dataset import BEHAV_KEY, PPA_KEY
+from repro.core.fastchar import compile_surrogate_batch
+from repro.core.fastmoo import CompiledNSGA2
+from repro.core.moo import nsga2
+
+from .common import BenchCtx, row
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    spec = ctx.spec8
+    ds = ctx.ds8()
+    rows: list[dict] = []
+    pop = 64 if ctx.quick else 256
+    gens = 20 if ctx.quick else 250
+    evals = pop * (gens + 1)
+
+    yb = ds.metrics[BEHAV_KEY]
+    yp = ds.metrics[PPA_KEY]
+    ests = fit_estimators(
+        ds.configs.astype(np.float64),
+        {BEHAV_KEY: yb, PPA_KEY: yp},
+        n_quad=24,
+        seed=ctx.seed,
+    )
+    mb, mp = float(yb.max()), float(yp.max())
+    ref = np.array([1.05 * mb, 1.05 * mp])
+
+    def eval_fn(cfgs):
+        X = cfgs.astype(np.float64)
+        return np.stack([ests[BEHAV_KEY].predict(X), ests[PPA_KEY].predict(X)], -1)
+
+    def viol_fn(cfgs):
+        o = eval_fn(cfgs)
+        return (
+            np.maximum(0.0, o[:, 0] - mb) / mb + np.maximum(0.0, o[:, 1] - mp) / mp
+        )
+
+    # -- numpy oracle GA ------------------------------------------------------
+    t0 = time.perf_counter()
+    r_np = nsga2(eval_fn, n_bits=spec.n_luts, pop_size=pop, n_gen=gens,
+                 seed=ctx.seed, violation_fn=viol_fn, hv_ref=ref)
+    t_np = time.perf_counter() - t0
+    rows.append(row("fastmoo.ga_numpy", t_np * 1e6, f"{evals / t_np:.0f} evals/s"))
+
+    # -- numpy GA + jit surrogate (the PR-1 hybrid) ---------------------------
+    fn = compile_surrogate_batch(ests, BEHAV_KEY, PPA_KEY, mb, mp)
+    fn(ds.configs[:pop].astype(np.float64))  # compile
+    t0 = time.perf_counter()
+    nsga2(None, n_bits=spec.n_luts, pop_size=pop, n_gen=gens, seed=ctx.seed,
+          eval_viol_fn=fn, hv_ref=ref)
+    t_hy = time.perf_counter() - t0
+    rows.append(row("fastmoo.ga_hybrid", t_hy * 1e6, f"{evals / t_hy:.0f} evals/s"))
+
+    # -- fully-jitted device GA ----------------------------------------------
+    runner = CompiledNSGA2(fn.objs_fn, n_bits=spec.n_luts, pop_size=pop,
+                           n_gen=gens, hv_ref=ref)
+    runner.run(seed=ctx.seed, max_behav=mb, max_ppa=mp)  # compile
+    t0 = time.perf_counter()
+    r_jx = runner.run(seed=ctx.seed, max_behav=mb, max_ppa=mp)
+    t_jx = time.perf_counter() - t0
+    rows.append(row("fastmoo.ga_jax", t_jx * 1e6, f"{evals / t_jx:.0f} evals/s"))
+    rows.append(row("fastmoo.ga_speedup_vs_numpy", 0.0, f"{t_np / t_jx:.1f}x"))
+    rows.append(row("fastmoo.ga_speedup_vs_hybrid", 0.0, f"{t_hy / t_jx:.1f}x"))
+
+    hv_np = r_np.hv_history[-1][1]
+    hv_jx = r_jx.hv_history[-1][1]
+    rows.append(row(
+        "fastmoo.hv_parity_rel_diff", 0.0,
+        f"{abs(hv_jx - hv_np) / max(abs(hv_np), 1e-9):.2e}"
+        f" (numpy={hv_np:.5g} jax={hv_jx:.5g})",
+    ))
+
+    # -- (seeds x const_sf) sweep: one vmapped dispatch vs back-to-back runs --
+    seeds = (0, 1) if ctx.quick else (0, 1, 2, 3)
+    sf_grid = (0.5, 1.5) if ctx.quick else (0.2, 0.5, 1.0)
+    lane_seeds = [s for _ in sf_grid for s in seeds]
+    bounds = [(sf * mb, sf * mp) for sf in sf_grid for _ in seeds]
+    n_lanes = len(lane_seeds)
+
+    runner.run_sweep(lane_seeds, bounds)  # compile the vmapped program
+    t0 = time.perf_counter()
+    runner.run_sweep(lane_seeds, bounds)
+    t_sweep = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for s, (b, p) in zip(lane_seeds, bounds):
+        runner.run(seed=s, max_behav=b, max_ppa=p)
+    t_loop = time.perf_counter() - t0
+    rows.append(row("fastmoo.sweep_vmapped", t_sweep * 1e6,
+                    f"{n_lanes} lanes, {n_lanes * evals / t_sweep:.0f} evals/s"))
+    rows.append(row("fastmoo.sweep_sequential", t_loop * 1e6,
+                    f"{n_lanes * evals / t_loop:.0f} evals/s"))
+    rows.append(row("fastmoo.sweep_speedup", 0.0, f"{t_loop / t_sweep:.1f}x"))
+    return rows

@@ -28,6 +28,7 @@ BENCHES = [
     "kernels",        # beyond-paper kernel parity
     "fastchar",       # batched characterization engine vs numpy oracle
     "fastapp",        # batched application-BEHAV engine vs numpy oracle
+    "fastmoo",        # device NSGA-II engine vs numpy oracle GA
 ]
 
 

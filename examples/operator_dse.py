@@ -8,7 +8,9 @@ validated Pareto fronts + hypervolumes, plus the EvoApprox-style frozen-library
 baseline under the same constraints.  ``--app {ecg,mnist,gauss,ffn}`` switches
 the BEHAV objective to an application metric (paper Figs. 16-19);
 ``--backend jax`` runs characterization and application BEHAV through the
-accelerator-native fastchar/fastapp engines.
+accelerator-native fastchar/fastapp engines (and, by default, the whole
+NSGA-II generation loop through the fastmoo device engine; ``--ga-backend
+numpy`` keeps the host GA while characterizing on device).
 """
 
 import argparse
@@ -37,6 +39,9 @@ def main():
                     help="application-level DSE target (default: operator-level)")
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="characterization/app-BEHAV engine")
+    ap.add_argument("--ga-backend", choices=("numpy", "jax"), default=None,
+                    help="NSGA-II engine (default: follow --backend; 'jax' runs "
+                         "the whole generation loop as one compiled dispatch)")
     args = ap.parse_args()
 
     spec = spec_for(8)
@@ -59,7 +64,8 @@ def main():
 
     st = DSESettings(const_sf=args.const_sf, pop_size=48, n_gen=args.gens,
                      n_quad_grid=(0, 4, 16), pool_size=6, seed=0,
-                     behav_key=behav_key, backend=args.backend)
+                     behav_key=behav_key, backend=args.backend,
+                     ga_backend=args.ga_backend)
     ref = hv_reference(ds, st)
     pool = map_solution_pool(spec, ds, st)
     print(f"MaP pool: {len(pool)} configs (const_sf={args.const_sf})")

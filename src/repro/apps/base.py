@@ -22,6 +22,7 @@ __all__ = [
     "table_conv1d",
     "table_conv2d",
     "AxOApplication",
+    "characterized_dataset_multi",
 ]
 
 
@@ -143,3 +144,44 @@ class AxOApplication:
             return np.stack([b, ds.metrics[ppa_key]], axis=-1)
 
         return fn
+
+
+def characterized_dataset_multi(
+    apps,
+    spec: OperatorSpec,
+    base: Dataset,
+    backend: str = "numpy",
+    batch: int = 128,
+) -> Dataset:
+    """Attach *every* app's BEHAV metric with one shared table pass per chunk.
+
+    ``AxOApplication.characterized_dataset`` runs one engine pass per app --
+    the product tables of the whole dataset are rebuilt for each of the four
+    heads.  Here each config chunk's tables are built once and scored by all
+    apps: on ``backend="jax"`` a single device ``TableBatch`` (lazily-shared
+    ``small``/full tables) feeds every ``behav_jax_from_tables`` head; on
+    ``"numpy"`` the host product tables are likewise built once per chunk.
+    Per-app results are identical to the one-app-at-a-time path.
+    """
+    apps = list(apps)
+    metrics = dict(base.metrics)
+    if backend == "jax":
+        from .fastapp import multi_app_behav_jax  # lazy: keeps numpy path JAX-free
+
+        vals = multi_app_behav_jax(apps, spec, base.configs, batch=batch)
+        for app in apps:
+            metrics[app.behav_metric_name()] = vals[app.name]
+    elif backend == "numpy":
+        configs = np.atleast_2d(np.asarray(base.configs))
+        d = len(configs)
+        out = {app.name: np.empty(d, dtype=np.float64) for app in apps}
+        for lo in range(0, d, batch):
+            hi = min(lo + batch, d)
+            tables = product_tables(spec, configs[lo:hi])
+            for app in apps:
+                out[app.name][lo:hi] = app.behav_from_tables(tables)
+        for app in apps:
+            metrics[app.behav_metric_name()] = out[app.name]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return Dataset(configs=base.configs, metrics=metrics, source=base.source)

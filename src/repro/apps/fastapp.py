@@ -56,6 +56,7 @@ __all__ = [
     "table_conv2d_jax",
     "mismatch_counts",
     "app_behav_jax",
+    "multi_app_behav_jax",
 ]
 
 MATMUL_IMPLS = ("gemm", "xla", "pallas")
@@ -448,6 +449,34 @@ def mismatch_counts(
 # ---------------------------------------------------------------------------
 
 
+def multi_app_behav_jax(
+    apps, spec: OperatorSpec, configs: np.ndarray, batch: int = 128
+) -> dict[str, np.ndarray]:
+    """(D, L) configs -> {app.name: (D,) BEHAV} with ONE shared TableBatch.
+
+    Scoring several applications one at a time re-runs the table gathers per
+    app; here each config chunk is staged as a single device ``TableBatch``
+    whose lazily-cached ``small``/``tables`` fields are shared by every app's
+    ``behav_jax_from_tables`` head -- the multi-app DSE batching used by
+    ``benchmarks/bench_apps.py`` (one engine pass for all four heads).
+    """
+    apps = list(apps)
+    configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
+    d = len(configs)
+    out = {app.name: np.empty(d, dtype=np.float64) for app in apps}
+    for lo in range(0, d, batch):
+        hi = min(lo + batch, d)
+        cfgs = configs[lo:hi]
+        bucket = min(batch, 1 << max(len(cfgs) - 1, 1).bit_length())
+        pad = bucket - len(cfgs)
+        if pad:
+            cfgs = np.concatenate([cfgs, np.zeros((pad, cfgs.shape[1]), np.uint8)])
+        tb = table_batch(spec, cfgs)
+        for app in apps:
+            out[app.name][lo:hi] = app.behav_jax_from_tables(tb)[: hi - lo]
+    return out
+
+
 def app_behav_jax(
     app, spec: OperatorSpec, configs: np.ndarray, batch: int = 128
 ) -> np.ndarray:
@@ -461,16 +490,4 @@ def app_behav_jax(
     kernels compile at most ~log2(batch) distinct D shapes across a whole DSE
     run, however ragged the validated fronts get.
     """
-    configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
-    d = len(configs)
-    out = np.empty(d, dtype=np.float64)
-    for lo in range(0, d, batch):
-        hi = min(lo + batch, d)
-        cfgs = configs[lo:hi]
-        bucket = min(batch, 1 << max(len(cfgs) - 1, 1).bit_length())
-        pad = bucket - len(cfgs)
-        if pad:
-            cfgs = np.concatenate([cfgs, np.zeros((pad, cfgs.shape[1]), np.uint8)])
-        vals = app.behav_jax_from_tables(table_batch(spec, cfgs))
-        out[lo:hi] = vals[: hi - lo]
-    return out
+    return multi_app_behav_jax([app], spec, configs, batch=batch)[app.name]

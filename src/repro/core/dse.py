@@ -40,6 +40,7 @@ __all__ = [
     "hv_reference",
     "map_solution_pool",
     "run_dse",
+    "run_dse_sweep",
     "fixed_library",
     "CONST_SF_GRID",
 ]
@@ -54,9 +55,14 @@ class DSESettings:
 
     ``backend`` selects the characterization/surrogate execution engine:
     ``"numpy"`` (default, the bit-exact oracle) or ``"jax"``, which routes VPF
-    re-characterization through ``repro.core.fastchar``, compiles the NSGA-II
-    surrogate fitness into one device dispatch per generation, and batches the
-    MaP enumeration scoring on device.
+    re-characterization through ``repro.core.fastchar``, batches the MaP
+    solver scoring on device, and runs the GA on the device engine.
+
+    ``ga_backend`` selects the NSGA-II engine independently: ``None`` follows
+    ``backend``; ``"numpy"`` is the host oracle GA (under ``backend="jax"``
+    its surrogate fitness still compiles to one dispatch per generation);
+    ``"jax"`` runs the whole generation loop on device
+    (``repro.core.fastmoo``; hypervolume-parity with the oracle, RNG differs).
     """
 
     ppa_key: str = PPA_KEY
@@ -70,6 +76,7 @@ class DSESettings:
     seed: int = 0
     n_estimator_quad: int = 48
     backend: str = "numpy"
+    ga_backend: str | None = None
 
     def __post_init__(self) -> None:
         # fail at construction, not deep inside characterize with an opaque error
@@ -77,6 +84,14 @@ class DSESettings:
             raise ValueError(
                 f"backend must be 'numpy' or 'jax', got {self.backend!r}"
             )
+        if self.ga_backend not in (None, "numpy", "jax"):
+            raise ValueError(
+                f"ga_backend must be None, 'numpy' or 'jax', got {self.ga_backend!r}"
+            )
+
+    @property
+    def resolved_ga_backend(self) -> str:
+        return self.backend if self.ga_backend is None else self.ga_backend
 
 
 @dataclass
@@ -315,17 +330,42 @@ def run_dse(
         ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
     else:
         init = map_pool if method == "map+ga" else None
-        ga: GAResult = nsga2(
-            eval_fn,
-            n_bits=spec.n_luts,
-            pop_size=settings.pop_size,
-            n_gen=settings.n_gen,
-            seed=settings.seed,
-            initial_population=init,
-            violation_fn=viol_fn,
-            hv_ref=ref,
-            eval_viol_fn=eval_viol_fn,
-        )
+        ga: GAResult
+        if settings.resolved_ga_backend == "jax":
+            from .fastchar import surrogate_objs_device  # lazy JAX import
+
+            objs_fn = (
+                eval_viol_fn.objs_fn
+                if eval_viol_fn is not None
+                else surrogate_objs_device(
+                    estimators, settings.behav_key, settings.ppa_key
+                )
+            )
+            ga = nsga2(
+                None,
+                n_bits=spec.n_luts,
+                pop_size=settings.pop_size,
+                n_gen=settings.n_gen,
+                seed=settings.seed,
+                initial_population=init,
+                hv_ref=ref,
+                backend="jax",
+                objs_device_fn=objs_fn,
+                max_behav=max_behav,
+                max_ppa=max_ppa,
+            )
+        else:
+            ga = nsga2(
+                eval_fn,
+                n_bits=spec.n_luts,
+                pop_size=settings.pop_size,
+                n_gen=settings.n_gen,
+                seed=settings.seed,
+                initial_population=init,
+                violation_fn=viol_fn,
+                hv_ref=ref,
+                eval_viol_fn=eval_viol_fn,
+            )
         n_evals = len(ga.archive_configs)
         hv_history = ga.hv_history
         ppf_c, ppf_o = _ppf_from_archive(ga.archive_configs, ga.archive_objs, ga.archive_viol)
@@ -348,6 +388,111 @@ def run_dse(
         hv_history=hv_history,
         ref_point=ref,
     )
+
+
+def run_dse_sweep(
+    spec: OperatorSpec,
+    train_ds: Dataset,
+    method: str = "ga",
+    settings: DSESettings | None = None,
+    seeds=(0,),
+    const_sf_grid=None,
+    estimators: dict[str, AutoMLRegressor] | None = None,
+    characterize_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+    app=None,
+) -> list[DSEResult]:
+    """A (seeds x const_sf) restart/constraint grid as ONE batched GA dispatch.
+
+    The host-loop equivalent -- calling ``run_dse`` once per (seed, const_sf)
+    -- re-runs the whole generation loop per lane; here every lane shares one
+    ``fastmoo.CompiledNSGA2`` program and the full grid executes as a single
+    vmapped device dispatch (estimators fitted once, MaP pools solved once per
+    const_sf for ``method="map+ga"``).  Requires ``ga_backend="jax"``.  Lane
+    order: ``for const_sf in const_sf_grid: for seed in seeds``.
+    """
+    import dataclasses
+
+    from .fastchar import surrogate_objs_device  # lazy JAX import
+    from .fastmoo import CompiledNSGA2
+
+    settings = settings or DSESettings()
+    if settings.resolved_ga_backend != "jax":
+        raise ValueError("run_dse_sweep requires ga_backend='jax'")
+    if method not in ("ga", "map+ga"):
+        raise ValueError(f"unsupported sweep method {method!r}")
+    t0 = time.time()
+    const_sf_grid = (
+        (settings.const_sf,) if const_sf_grid is None else tuple(const_sf_grid)
+    )
+    if app is not None and characterize_fn is None:
+        characterize_fn = app.characterize_fn(
+            spec, ppa_key=settings.ppa_key, backend=settings.backend
+        )
+    if estimators is None:
+        estimators = fit_estimators(
+            train_ds.configs.astype(np.float64),
+            {
+                settings.behav_key: train_ds.metrics[settings.behav_key],
+                settings.ppa_key: train_ds.metrics[settings.ppa_key],
+            },
+            n_quad=settings.n_estimator_quad,
+            seed=settings.seed,
+        )
+    characterize_fn = characterize_fn or _default_characterize(spec, settings)
+    ref = hv_reference(train_ds, settings)
+
+    runner = CompiledNSGA2(
+        surrogate_objs_device(estimators, settings.behav_key, settings.ppa_key),
+        n_bits=spec.n_luts,
+        pop_size=settings.pop_size,
+        n_gen=settings.n_gen,
+        hv_ref=ref,
+    )
+
+    lane_settings: list[DSESettings] = []
+    bounds: list[tuple[float, float]] = []
+    pools: list[np.ndarray | None] = []
+    lane_seeds: list[int] = []
+    for sf in const_sf_grid:
+        st_sf = dataclasses.replace(settings, const_sf=sf)
+        mb, mp = _constraint_bounds(train_ds, st_sf)
+        pool = map_solution_pool(spec, train_ds, st_sf) if method == "map+ga" else None
+        for seed in seeds:
+            lane_settings.append(dataclasses.replace(st_sf, seed=int(seed)))
+            bounds.append((mb, mp))
+            pools.append(pool)
+            lane_seeds.append(int(seed))
+
+    gas = runner.run_sweep(
+        lane_seeds, bounds, pools if method == "map+ga" else None
+    )
+
+    results: list[DSEResult] = []
+    for st, (mb, mp), ga in zip(lane_settings, bounds, gas):
+        ppf_c, ppf_o = _ppf_from_archive(
+            ga.archive_configs, ga.archive_objs, ga.archive_viol
+        )
+        hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
+        vpf_c, vpf_o, hv_vpf = _validate(
+            spec, ppf_c, st, ref, characterize_fn, mb, mp
+        )
+        results.append(
+            DSEResult(
+                method=method,
+                settings=st,
+                ppf_configs=ppf_c,
+                ppf_objs_est=ppf_o,
+                vpf_configs=vpf_c,
+                vpf_objs=vpf_o,
+                hv_ppf=hv_ppf,
+                hv_vpf=hv_vpf,
+                n_evals=len(ga.archive_configs),
+                wall_s=time.time() - t0,
+                hv_history=ga.hv_history,
+                ref_point=ref,
+            )
+        )
+    return results
 
 
 def fixed_library(spec: OperatorSpec, n_random_fixed: int = 64) -> np.ndarray:

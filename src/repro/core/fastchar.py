@@ -53,8 +53,10 @@ __all__ = [
     "default_a_tile",
     "behav_partials",
     "behav_metrics_jax",
+    "surrogate_objs_device",
     "compile_surrogate_batch",
     "map_problem_values_jax",
+    "tabu_neighbor_values_jax",
 ]
 
 
@@ -338,6 +340,24 @@ def _estimator_predict_jax(est):
     raise TypeError(f"no JAX path for estimator {type(model).__name__}")
 
 
+def surrogate_objs_device(estimators: dict, behav_key: str, ppa_key: str):
+    """(B, L) f32 -> (B, 2) f32 device surrogate-objective closure (un-jitted).
+
+    This is the fusion hook for the device GA engine: ``fastmoo`` traces it
+    *inside* its generation loop so NSGA-II fitness evaluation compiles into
+    the same program as selection/crossover/mutation (poly models become fused
+    matmuls, GBT forests become batched gather walks).
+    """
+    pb = _estimator_predict_jax(estimators[behav_key])
+    pp = _estimator_predict_jax(estimators[ppa_key])
+
+    def objs_fn(X):
+        X = X.astype(jnp.float32)
+        return jnp.stack([pb(X), pp(X)], axis=-1)
+
+    return objs_fn
+
+
 def compile_surrogate_batch(
     estimators: dict,
     behav_key: str,
@@ -347,13 +367,13 @@ def compile_surrogate_batch(
 ):
     """jit one (B, L) -> ((B, 2) objectives, (B,) violation) surrogate dispatch.
 
-    This is the NSGA-II fast path: fitness + constraint violation of a whole
-    generation in a single compiled call (poly models become fused matmuls, GBT
-    forests become batched gather walks).  Results are float32; the numpy
-    estimators remain the reference implementation.
+    This is the host-loop NSGA-II fast path (``ga_backend="numpy"`` with
+    ``backend="jax"``): fitness + constraint violation of a whole generation
+    in a single compiled call.  Results are float32; the numpy estimators
+    remain the reference implementation.  The underlying device closure is
+    exposed as ``fn.objs_fn`` for the fully-fused ``fastmoo`` engine.
     """
-    pb = _estimator_predict_jax(estimators[behav_key])
-    pp = _estimator_predict_jax(estimators[ppa_key])
+    objs_fn = surrogate_objs_device(estimators, behav_key, ppa_key)
     nb = jnp.float32(max(abs(max_behav), 1e-9))
     np_ = jnp.float32(max(abs(max_ppa), 1e-9))
     mb = jnp.float32(max_behav)
@@ -361,10 +381,8 @@ def compile_surrogate_batch(
 
     @jax.jit
     def eval_viol(X):
-        X = X.astype(jnp.float32)
-        yb = pb(X)
-        yp = pp(X)
-        objs = jnp.stack([yb, yp], axis=-1)
+        objs = objs_fn(X)
+        yb, yp = objs[:, 0], objs[:, 1]
         viol = jnp.maximum(0.0, yb - mb) / nb + jnp.maximum(0.0, yp - mp) / np_
         return objs, viol
 
@@ -375,6 +393,7 @@ def compile_surrogate_batch(
             np.asarray(viol, dtype=np.float64),
         )
 
+    fn.objs_fn = objs_fn
     return fn
 
 
@@ -400,3 +419,46 @@ def map_problem_values_jax(problem, configs: np.ndarray) -> tuple[np.ndarray, ..
     vals = _quad_values(jnp.asarray(configs, jnp.float32), const, lin, quad)
     v = np.asarray(vals, dtype=np.float64)
     return v[0], v[1], v[2]
+
+
+@jax.jit
+def _tabu_step_values(states, const, lin, quad, sym):
+    """states (S, L); expr stacks (K,), (K, L), (K, L, L) -> values + deltas.
+
+    Returns ``vals (K, S)`` -- each expression at each start's current point --
+    and ``deltas (K, S, L)`` -- the change from flipping each single bit
+    (``QuadExpr.flip_deltas`` batched over starts and expressions).
+    """
+    lin_t = states @ lin.T                                        # (S, K)
+    quad_t = jnp.einsum("si,kij,sj->sk", states, quad, states)
+    vals = (const[None] + lin_t + quad_t).T                       # (K, S)
+    grad = lin[:, None, :] + jnp.einsum("kij,sj->ksi", sym, states)
+    deltas = (1.0 - 2.0 * states)[None] * grad                    # (K, S, L)
+    return vals, deltas
+
+
+def tabu_neighbor_values_jax(problem):
+    """Batched multi-start neighborhood scorer for ``miqcp.solve_tabu``.
+
+    Returns ``step(states (S, L)) -> (vals (3, S), deltas (3, S, L))`` float64
+    numpy arrays with expression order (obj, behav, ppa): every start's full
+    single-flip neighborhood scored in one device dispatch, reusing the same
+    quadratic-form evaluation ``solve_enumerate(backend="jax")`` batches.
+    The jitted core is shared across problems (coefficients are traced
+    arguments), so a wt_B x n_quad problem battery compiles once per (S, L).
+    """
+    exprs = (problem.obj, problem.behav, problem.ppa)
+    const = jnp.asarray([e.const for e in exprs], jnp.float32)
+    lin = jnp.asarray(np.stack([e.lin for e in exprs]), jnp.float32)
+    quad = jnp.asarray(np.stack([e.quad for e in exprs]), jnp.float32)
+    sym = jnp.asarray(
+        np.stack([e.quad + e.quad.T for e in exprs]), jnp.float32
+    )
+
+    def step(states: np.ndarray):
+        vals, deltas = _tabu_step_values(
+            jnp.asarray(states, jnp.float32), const, lin, quad, sym
+        )
+        return np.asarray(vals, np.float64), np.asarray(deltas, np.float64)
+
+    return step

@@ -1,0 +1,492 @@
+"""Device-resident NSGA-II engine (the GA's ``backend="jax"`` path).
+
+After PRs 1-2 only the surrogate *fitness* of each NSGA-II generation was
+compiled (``fastchar.compile_surrogate_batch``); non-dominated sorting,
+tournament selection, crossover, mutation and environmental selection still
+round-tripped to host numpy every generation, making the GA loop the serial
+bottleneck of ``run_dse``.  This module runs the entire search as **one
+compiled computation**:
+
+  * ``jax.random``-keyed initialization (seed rows from a MaP pool supported
+    via a traced ``init_count`` prefix mask),
+  * constraint-dominated ranks via a batched dominance matrix peeled front by
+    front inside a ``lax.while_loop`` (or, with ``rank_impl="pallas"``, via
+    the tiled dominance-count kernel in ``kernels.moo_kernels`` that never
+    materializes the (P, P, n_obj) comparison tensor),
+  * crowding distance over all fronts at once (rank-segmented sort + segment
+    min/max spans),
+  * binary tournament selection, single-point crossover, bit-flip mutation,
+  * combined-population environmental selection as a single rank-then-crowding
+    ``lexsort`` truncation,
+  * an on-device feasible-archive tracker: every evaluated individual lands in
+    a preallocated device archive and the exact 2-D hypervolume of its
+    feasible subset is computed on device at the same checkpoints the numpy
+    oracle records -- ``hv_history`` needs no host sync inside the loop,
+
+all inside one jitted ``lax.fori_loop`` fused with the surrogate evaluator.
+A ``vmap`` axis over (seed, constraint-bound) turns a whole multi-restart,
+multi-constraint DSE sweep into a single batched GA dispatch
+(``CompiledNSGA2.run_sweep`` / ``dse.run_dse_sweep``).
+
+The numpy ``moo.nsga2`` stays the behavioral oracle: identical operators and
+selection semantics, but ``jax.random`` streams differ from numpy's, so the
+contract is *hypervolume parity* (tests assert the feasible-archive
+hypervolume within 2%), not bit parity.
+
+Everything is opt-in: importing this module pulls in JAX; ``moo.nsga2`` only
+imports it lazily when a caller passes ``backend="jax"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .moo import GAResult
+
+__all__ = [
+    "UNBOUNDED",
+    "dominance_matrix",
+    "constraint_ranks",
+    "crowding_distance_jax",
+    "hypervolume_2d_jax",
+    "CompiledNSGA2",
+    "nsga2_jax",
+]
+
+# Effectively-unconstrained bound: max(0, y - 1e30) == 0 for any real metric,
+# and 1e30 stays finite in f32 so the normalized violation is an exact 0.
+UNBOUNDED = 1e30
+
+
+# ---------------------------------------------------------------------------
+# Device building blocks (each the jnp twin of a moo.py function)
+# ---------------------------------------------------------------------------
+
+
+def dominance_matrix(objs: jnp.ndarray, viol: jnp.ndarray) -> jnp.ndarray:
+    """(n, n) bool, [i, j] = i constraint-dominates j (moo's exact rule)."""
+    le = (objs[:, None, :] <= objs[None, :, :]).all(-1)
+    lt = (objs[:, None, :] < objs[None, :, :]).any(-1)
+    fi = viol <= 0
+    dom = (fi[:, None] & fi[None, :]) & (le & lt)
+    dom |= fi[:, None] & ~fi[None, :]
+    dom |= (~fi[:, None] & ~fi[None, :]) & (viol[:, None] < viol[None, :])
+    return dom
+
+
+def constraint_ranks(
+    objs: jnp.ndarray,
+    viol: jnp.ndarray,
+    impl: str = "xla",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(n,) int32 fronts (0 = best), constraint domination; jnp twin of
+    ``moo.fast_nondominated_sort``.
+
+    Only *feasible* fronts are peeled sequentially (``count_fn(active)`` ->
+    per-point count of active dominators, a ``lax.while_loop`` round per
+    front -- identical fronts to the oracle, which subtracts assigned
+    dominators incrementally).  Infeasible points are totally ordered by
+    violation and dominated by every feasible point, so their ranks are the
+    closed form ``n_feasible_fronts + dense_rank(violation)`` -- without this
+    split a tightly-constrained population degenerates into one
+    front-per-distinct-violation and hundreds of sequential peel rounds.
+
+    ``impl="xla"`` builds the (n, n) bool dominance matrix once and counts by
+    masked column sums; ``impl="pallas"`` recounts dominators each round with
+    the tiled kernel and never materializes the matrix.
+    """
+    n = objs.shape[0]
+    feas = viol <= 0
+    if impl == "xla":
+        dom = dominance_matrix(objs, viol)
+        count_fn = lambda active: (dom & active[:, None]).sum(0)
+    elif impl == "pallas":
+        from ..kernels.moo_kernels import dominance_counts_pallas
+        from ..kernels.ops import on_tpu
+
+        interpret = (not on_tpu()) if interpret is None else interpret
+        tile = n if n <= 64 else 64
+        pad = (-n) % tile
+        if pad:  # +inf-violation pad rows: infeasible, inactive, never counted
+            objs_p = jnp.concatenate([objs, jnp.zeros((pad, objs.shape[1]), objs.dtype)])
+            viol_p = jnp.concatenate([viol, jnp.full((pad,), jnp.inf, viol.dtype)])
+        else:
+            objs_p, viol_p = objs, viol
+
+        def count_fn(active):
+            act = jnp.concatenate([active, jnp.zeros(pad, bool)]) if pad else active
+            return dominance_counts_pallas(
+                objs_p, viol_p, act, tile=tile, interpret=interpret
+            )[:n]
+    else:
+        raise ValueError(f"unknown fastmoo rank impl {impl!r}")
+
+    def cond(state):
+        _, assigned, r = state
+        return (~assigned).any() & (r <= n)
+
+    def body(state):
+        rank, assigned, r = state
+        counts = count_fn(~assigned)
+        front = (counts == 0) & ~assigned
+        rank = jnp.where(front, r, rank)
+        return rank, assigned | front, r + 1
+
+    rank0 = jnp.zeros(n, jnp.int32)
+    # infeasible points start pre-assigned: they never block a feasible one
+    rank, _, n_feas_fronts = jax.lax.while_loop(cond, body, (rank0, ~feas, 0))
+
+    vio = jnp.where(feas, -jnp.inf, viol.astype(jnp.float32))
+    order = jnp.argsort(vio)
+    vs = vio[order]
+    prev = jnp.concatenate([jnp.full((1,), -jnp.inf, vs.dtype), vs[:-1]])
+    dense = jnp.cumsum((vs > prev).astype(jnp.int32))  # 1-based distinct-value id
+    rank = rank.at[order].set(
+        jnp.where(feas[order], rank[order], n_feas_fronts + dense - 1)
+    )
+    return rank
+
+
+def crowding_distance_jax(objs: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
+    """Per-front crowding distance for all fronts in one pass.
+
+    Equivalent to calling ``moo.crowding_distance`` on each front: a stable
+    (rank, objective) lexsort makes front members contiguous, so segment
+    boundaries are the per-front extremes (inf) and interior members take
+    span-normalized neighbor gaps.  Fronts of <= 2 members are all-boundary,
+    reproducing the oracle's all-inf case.
+    """
+    n, m = objs.shape
+    dist = jnp.zeros(n, jnp.float32)
+    for k in range(m):
+        o = objs[:, k]
+        span = (
+            jax.ops.segment_max(o, rank, num_segments=n)
+            - jax.ops.segment_min(o, rank, num_segments=n)
+        )
+        order = jnp.lexsort((o, rank))
+        ro = rank[order]
+        oo = o[order]
+        brk = ro[1:] != ro[:-1]
+        first = jnp.concatenate([jnp.ones(1, bool), brk])
+        last = jnp.concatenate([brk, jnp.ones(1, bool)])
+        prev = jnp.concatenate([oo[:1], oo[:-1]])
+        nxt = jnp.concatenate([oo[1:], oo[-1:]])
+        sp = span[ro]
+        gap = jnp.where(sp > 0, (nxt - prev) / jnp.where(sp > 0, sp, 1.0), 0.0)
+        dist = dist.at[order].add(jnp.where(first | last, jnp.inf, gap))
+    return dist
+
+
+def hypervolume_2d_jax(
+    objs: jnp.ndarray, valid: jnp.ndarray, ref: jnp.ndarray
+) -> jnp.ndarray:
+    """Exact 2-D hypervolume of the valid subset w.r.t. ``ref`` (minimized).
+
+    jnp twin of ``moo.hypervolume_2d``: invalid / beyond-reference points sort
+    to +inf and contribute nothing; a (x, then y) lexsort plus an exclusive
+    running y-minimum reproduces the oracle's Pareto staircase sweep without
+    an explicit Pareto filter (weakly dominated points fail ``y < prev``).
+    """
+    valid = valid & (objs[:, 0] <= ref[0]) & (objs[:, 1] <= ref[1])
+    x = jnp.where(valid, objs[:, 0], jnp.inf)
+    y = jnp.where(valid, objs[:, 1], jnp.inf)
+    # single-key sort: for tied x the staircase contributions telescope to the
+    # same total whatever the y order, so no secondary sort key is needed
+    order = jnp.argsort(x)
+    xs, ys = x[order], y[order]
+    run = jnp.minimum(jax.lax.cummin(ys), ref[1])
+    prev = jnp.concatenate([ref[1][None], run[:-1]])
+    contrib = (ref[0] - xs) * (prev - ys)
+    return jnp.where(jnp.isfinite(xs) & (ys < prev), contrib, 0.0).sum()
+
+
+# ---------------------------------------------------------------------------
+# The compiled GA
+# ---------------------------------------------------------------------------
+
+
+class CompiledNSGA2:
+    """One NSGA-II run (or a vmapped sweep of runs) as a single dispatch.
+
+    ``objs_fn`` is a pure jnp function ``(B, L) f32 -> (B, n_obj=2) f32`` --
+    e.g. ``fastchar.surrogate_objs_device`` -- traced *inside* the generation
+    loop so fitness evaluation fuses with the GA operators.  Constraint bounds
+    ``(max_behav, max_ppa)`` are traced arguments, which is what lets
+    ``run_sweep`` vmap one compiled program over a (seed x bound) grid.
+
+    Construct once and reuse: the jitted single-run and sweep closures are
+    cached on the instance, so repeated ``run`` calls (a DSE battery, a
+    benchmark loop) pay compilation once per population shape.
+    """
+
+    def __init__(
+        self,
+        objs_fn: Callable[[jnp.ndarray], jnp.ndarray],
+        n_bits: int,
+        pop_size: int = 64,
+        n_gen: int = 250,
+        crossover_p: float = 0.9,
+        mutation_p: float | None = None,
+        hv_ref: np.ndarray | None = None,
+        record_every: int = 10,
+        rank_impl: str = "xla",
+        interpret: bool | None = None,
+    ) -> None:
+        if pop_size % 2:
+            raise ValueError(f"pop_size must be even, got {pop_size}")
+        if rank_impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown rank_impl {rank_impl!r}")
+        self.n_bits = int(n_bits)
+        self.pop_size = int(pop_size)
+        self.n_gen = int(n_gen)
+        self.crossover_p = float(crossover_p)
+        self.mutation_p = float(
+            mutation_p if mutation_p is not None else 1.0 / n_bits
+        )
+        self.record_every = int(record_every)
+        self.hv_ref = None if hv_ref is None else np.asarray(hv_ref, np.float64)
+        self._ranks = functools.partial(
+            constraint_ranks, impl=rank_impl, interpret=interpret
+        )
+        self._objs_fn = objs_fn
+        run = self._build()
+        self._single = jax.jit(run)
+        self._sweep = jax.jit(jax.vmap(run))
+
+    # -- trace-time program ---------------------------------------------------
+
+    def _build(self):
+        P, L, G = self.pop_size, self.n_bits, self.n_gen
+        M = P * (G + 1)
+        objs_fn = self._objs_fn
+        ranks_fn = self._ranks
+        cx_p = self.crossover_p
+        mut_p = self.mutation_p
+        rec = self.record_every
+        track_hv = self.hv_ref is not None
+        ref = (
+            None if not track_hv else jnp.asarray(self.hv_ref, jnp.float32)
+        )
+
+        def evaluate(pop, max_b, max_p):
+            objs = objs_fn(pop.astype(jnp.float32))
+            yb, yp = objs[:, 0], objs[:, 1]
+            vb = jnp.maximum(0.0, yb - max_b) / jnp.maximum(jnp.abs(max_b), 1e-9)
+            vp = jnp.maximum(0.0, yp - max_p) / jnp.maximum(jnp.abs(max_p), 1e-9)
+            return objs, vb + vp
+
+        def archive_hv(arc_objs, arc_viol):
+            return hypervolume_2d_jax(arc_objs, arc_viol <= 0, ref)
+
+        def gen_step(g, state):
+            key, pop, objs, viol, arc_c, arc_o, arc_v, hv_arr, max_b, max_p = state
+            rank = ranks_fn(objs, viol)
+            crowd = crowding_distance_jax(objs, rank)
+
+            key, k_cand, k_cx, k_cut, k_mut = jax.random.split(key, 5)
+
+            # binary tournament selection
+            cand = jax.random.randint(k_cand, (P, 2), 0, P)
+            a, b = cand[:, 0], cand[:, 1]
+            better = (rank[a] < rank[b]) | (
+                (rank[a] == rank[b]) & (crowd[a] > crowd[b])
+            )
+            parents = pop[jnp.where(better, a, b)]
+
+            # single-point crossover on consecutive pairs
+            do_cx = jax.random.uniform(k_cx, (P // 2,)) < cx_p
+            cut = jax.random.randint(k_cut, (P // 2,), 1, L)
+            swap = (jnp.arange(L)[None, :] >= cut[:, None]) & do_cx[:, None]
+            p1, p2 = parents[0::2], parents[1::2]
+            c1 = jnp.where(swap, p2, p1)
+            c2 = jnp.where(swap, p1, p2)
+            children = jnp.stack([c1, c2], axis=1).reshape(P, L)
+
+            # bit-flip mutation
+            flip = jax.random.uniform(k_mut, (P, L)) < mut_p
+            children = children ^ flip.astype(jnp.uint8)
+
+            c_objs, c_viol = evaluate(children, max_b, max_p)
+            arc_c = jax.lax.dynamic_update_slice(arc_c, children, ((g + 1) * P, 0))
+            arc_o = jax.lax.dynamic_update_slice(arc_o, c_objs, ((g + 1) * P, 0))
+            arc_v = jax.lax.dynamic_update_slice(arc_v, c_viol, ((g + 1) * P,))
+
+            # environmental selection: whole fronts, boundary front by crowding
+            all_pop = jnp.concatenate([pop, children])
+            all_objs = jnp.concatenate([objs, c_objs])
+            all_viol = jnp.concatenate([viol, c_viol])
+            rank2 = ranks_fn(all_objs, all_viol)
+            crowd2 = crowding_distance_jax(all_objs, rank2)
+            sel = jnp.lexsort((-crowd2, rank2))[:P]
+            pop, objs, viol = all_pop[sel], all_objs[sel], all_viol[sel]
+
+            if track_hv:
+                record = ((g % rec) == rec - 1) | (g == G - 1)
+                hv = jax.lax.cond(
+                    record,
+                    lambda: archive_hv(arc_o, arc_v),
+                    lambda: jnp.float32(0.0),
+                )
+                hv_arr = hv_arr.at[g].set(hv)
+
+            return key, pop, objs, viol, arc_c, arc_o, arc_v, hv_arr, max_b, max_p
+
+        def run(key, init_pop, init_count, max_b, max_p):
+            key, k_init = jax.random.split(key)
+            pop = jax.random.randint(k_init, (P, L), 0, 2, dtype=jnp.uint8)
+            seeded = jnp.arange(P)[:, None] < init_count
+            pop = jnp.where(seeded, init_pop, pop)
+            objs, viol = evaluate(pop, max_b, max_p)
+
+            arc_c = jnp.zeros((M, L), jnp.uint8)
+            arc_o = jnp.full((M, 2), jnp.inf, jnp.float32)
+            arc_v = jnp.full((M,), jnp.inf, jnp.float32)
+            arc_c = jax.lax.dynamic_update_slice(arc_c, pop, (0, 0))
+            arc_o = jax.lax.dynamic_update_slice(arc_o, objs, (0, 0))
+            arc_v = jax.lax.dynamic_update_slice(arc_v, viol, (0,))
+
+            hv0 = archive_hv(arc_o, arc_v) if track_hv else jnp.float32(0.0)
+            hv_arr = jnp.zeros((G,), jnp.float32)
+
+            state = (key, pop, objs, viol, arc_c, arc_o, arc_v, hv_arr, max_b, max_p)
+            state = jax.lax.fori_loop(0, G, gen_step, state)
+            _, pop, objs, viol, arc_c, arc_o, arc_v, hv_arr, _, _ = state
+            return {
+                "population": pop,
+                "objectives": objs,
+                "violations": viol,
+                "archive_configs": arc_c,
+                "archive_objs": arc_o,
+                "archive_viol": arc_v,
+                "hv0": hv0,
+                "hv": hv_arr,
+            }
+
+        return run
+
+    # -- host API -------------------------------------------------------------
+
+    def _prep_init(
+        self, initial_population: np.ndarray | None
+    ) -> tuple[np.ndarray, int]:
+        init = np.zeros((self.pop_size, self.n_bits), np.uint8)
+        k = 0
+        if initial_population is not None and len(initial_population):
+            k = min(len(initial_population), self.pop_size)
+            init[:k] = np.asarray(initial_population)[:k]
+        return init, k
+
+    def _to_result(self, out: dict) -> GAResult:
+        hv_hist: list[tuple[int, float]] = []
+        if self.hv_ref is not None:
+            P = self.pop_size
+            hv = np.asarray(out["hv"], np.float64)
+            hv_hist.append((P, float(out["hv0"])))
+            for g in range(self.n_gen):
+                if g % self.record_every == self.record_every - 1 or g == self.n_gen - 1:
+                    hv_hist.append(((g + 2) * P, float(hv[g])))
+        return GAResult(
+            population=np.asarray(out["population"], np.uint8),
+            objectives=np.asarray(out["objectives"], np.float64),
+            archive_configs=np.asarray(out["archive_configs"], np.uint8),
+            archive_objs=np.asarray(out["archive_objs"], np.float64),
+            archive_viol=np.asarray(out["archive_viol"], np.float64),
+            hv_history=hv_hist,
+        )
+
+    def run(
+        self,
+        seed: int = 0,
+        max_behav: float = UNBOUNDED,
+        max_ppa: float = UNBOUNDED,
+        initial_population: np.ndarray | None = None,
+    ) -> GAResult:
+        """One full GA run as a single device dispatch."""
+        init, k = self._prep_init(initial_population)
+        out = self._single(
+            jax.random.PRNGKey(seed),
+            jnp.asarray(init),
+            jnp.int32(k),
+            jnp.float32(max_behav),
+            jnp.float32(max_ppa),
+        )
+        return self._to_result({k_: np.asarray(v) for k_, v in out.items()})
+
+    def run_sweep(
+        self,
+        seeds,
+        bounds,
+        initial_populations=None,
+    ) -> list[GAResult]:
+        """A (seed x constraint-bound) sweep as ONE vmapped GA dispatch.
+
+        ``seeds``: (S,) ints; ``bounds``: (S, 2) [max_behav, max_ppa] rows;
+        ``initial_populations``: optional per-lane seed pools (list of arrays,
+        entries may be None/empty).  Returns one GAResult per lane.
+        """
+        seeds = list(seeds)
+        bounds = np.asarray(bounds, np.float64).reshape(len(seeds), 2)
+        inits, counts = [], []
+        for i in range(len(seeds)):
+            pool = None if initial_populations is None else initial_populations[i]
+            init, k = self._prep_init(pool)
+            inits.append(init)
+            counts.append(k)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        out = self._sweep(
+            keys,
+            jnp.asarray(np.stack(inits)),
+            jnp.asarray(np.asarray(counts, np.int32)),
+            jnp.asarray(bounds[:, 0], jnp.float32),
+            jnp.asarray(bounds[:, 1], jnp.float32),
+        )
+        host = {k_: np.asarray(v) for k_, v in out.items()}
+        return [
+            self._to_result({k_: v[i] for k_, v in host.items()})
+            for i in range(len(seeds))
+        ]
+
+
+def nsga2_jax(
+    objs_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    n_bits: int,
+    pop_size: int = 64,
+    n_gen: int = 250,
+    seed: int = 0,
+    initial_population: np.ndarray | None = None,
+    hv_ref: np.ndarray | None = None,
+    crossover_p: float = 0.9,
+    mutation_p: float | None = None,
+    max_behav: float = UNBOUNDED,
+    max_ppa: float = UNBOUNDED,
+    rank_impl: str = "xla",
+) -> GAResult:
+    """One-shot convenience wrapper; ``moo.nsga2(backend="jax")`` lands here.
+
+    Builds a :class:`CompiledNSGA2` and runs it once (compilation included);
+    batteries and benchmarks should hold a ``CompiledNSGA2`` and reuse it.
+    """
+    runner = CompiledNSGA2(
+        objs_fn,
+        n_bits=n_bits,
+        pop_size=pop_size,
+        n_gen=n_gen,
+        crossover_p=crossover_p,
+        mutation_p=mutation_p,
+        hv_ref=hv_ref,
+        rank_impl=rank_impl,
+    )
+    return runner.run(
+        seed=seed,
+        max_behav=max_behav,
+        max_ppa=max_ppa,
+        initial_population=initial_population,
+    )

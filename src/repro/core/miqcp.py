@@ -227,6 +227,114 @@ def solve_enumerate(
     return SolveResult(cfgs[order[0]], float(objs[order[0]]), cfgs[order], "enum")
 
 
+def _tabu_starts(problem: MapProblem, n_starts: int, seed: int) -> list[np.ndarray]:
+    """The shared multi-start battery: all-ones, all-zeros, then seeded random."""
+    L = problem.n
+    rng = np.random.default_rng(seed)
+    starts = [np.ones(L, dtype=np.float64), np.zeros(L, dtype=np.float64)]
+    while len(starts) < n_starts:
+        starts.append(rng.integers(0, 2, L).astype(np.float64))
+    return starts
+
+
+def _tabu_pool_result(
+    pool: list[tuple[float, bytes]],
+    best: np.ndarray | None,
+    best_obj: float,
+    pool_size: int,
+    L: int,
+) -> SolveResult:
+    if best is None:
+        return SolveResult(None, np.inf, np.empty((0, L), dtype=np.uint8), "tabu")
+    seen: dict[bytes, float] = {}
+    for obj, key in sorted(pool):
+        if key not in seen:
+            seen[key] = obj
+        if len(seen) >= pool_size:
+            break
+    pool_arr = np.stack(
+        [np.frombuffer(k, dtype=np.uint8) for k in seen]
+    ) if seen else np.empty((0, L), dtype=np.uint8)
+    return SolveResult(best, best_obj, pool_arr, "tabu")
+
+
+def _solve_tabu_jax(
+    problem: MapProblem,
+    n_starts: int,
+    n_iters: int,
+    tabu_tenure: int,
+    pool_size: int,
+    seed: int,
+) -> SolveResult:
+    """Lockstep multi-start tabu: every start's full single-flip neighborhood
+    scored per iteration in ONE device dispatch (``fastchar.
+    tabu_neighbor_values_jax``, the same batched quadratic-form scorer that
+    ``solve_enumerate(backend="jax")`` uses).
+
+    Same starts, operators, penalties and stopping rules as the numpy path,
+    but starts advance together instead of serially, so the shared aspiration
+    threshold sees cross-start bests in *iteration* order rather than start
+    order, and neighborhood scoring is f32 (feasibility/pool bookkeeping is
+    re-validated in host float64, like the enumerate jax path).  The returned
+    pool matches numpy's in feasibility and objective quality; membership can
+    differ on near-ties.
+    """
+    from .fastchar import tabu_neighbor_values_jax  # lazy JAX import
+
+    L = problem.n
+    states = np.stack(_tabu_starts(problem, n_starts, seed))      # (S, L)
+    S = len(states)
+    step = tabu_neighbor_values_jax(problem)
+    den_b = max(abs(problem.max_behav), 1e-9)
+    den_p = max(abs(problem.max_ppa), 1e-9)
+
+    rho = np.ones(S)
+    tabu = np.zeros((S, L), dtype=np.int64)
+    active = np.ones(S, dtype=bool)
+    cur_pen = problem.obj.value(states) + rho * problem.violation(states)
+    pool: list[tuple[float, bytes]] = []
+    best, best_obj = None, np.inf
+
+    for it in range(n_iters):
+        if not active.any():
+            break
+        vals, deltas = step(states)
+        obj_v, vb, vp = vals
+        d_obj, d_b, d_p = deltas
+        nb = np.maximum(0.0, vb[:, None] + d_b - problem.max_behav) / den_b
+        np_ = np.maximum(0.0, vp[:, None] + d_p - problem.max_ppa) / den_p
+        cand_pen = obj_v[:, None] + d_obj + rho[:, None] * (nb + np_)
+        blocked = tabu > it
+        asp = (cand_pen < best_obj) & (nb + np_ <= 0)
+        score = np.where(blocked & ~asp, np.inf, cand_pen)
+        k = np.argmin(score, axis=1)
+        k_score = score[np.arange(S), k]
+        active &= np.isfinite(k_score)
+        rows = np.where(active)[0]
+        if rows.size == 0:
+            break
+        move_gain = cur_pen - k_score
+        states[rows, k[rows]] = 1.0 - states[rows, k[rows]]
+        tabu[rows, k[rows]] = it + tabu_tenure
+        cur_pen = np.where(active, k_score, cur_pen)
+
+        # float64 bookkeeping of the moved states (feasibility, pool, best)
+        viol_new = problem.violation(states[rows])
+        obj_new = problem.obj.value(states[rows])
+        for ri, v, o in zip(rows, viol_new, obj_new):
+            if v <= 0:
+                key = states[ri].astype(np.uint8).tobytes()
+                pool.append((float(o), key))
+                if o < best_obj:
+                    best_obj, best = float(o), states[ri].astype(np.uint8).copy()
+            else:
+                rho[ri] *= 1.05
+        brk = (move_gain[rows] <= 1e-12) & (it > 20) & (rho[rows] > 100)
+        active[rows[brk]] = False
+
+    return _tabu_pool_result(pool, best, best_obj, pool_size, L)
+
+
 def solve_tabu(
     problem: MapProblem,
     n_starts: int = 8,
@@ -234,18 +342,25 @@ def solve_tabu(
     tabu_tenure: int = 7,
     pool_size: int = 16,
     seed: int = 0,
+    backend: str = "numpy",
 ) -> SolveResult:
-    """Multi-start tabu search with adaptive constraint penalty."""
+    """Multi-start steepest-descent tabu search with adaptive constraint penalty.
+
+    ``backend="jax"`` advances all starts in lockstep, scoring every start's
+    single-flip neighborhood as one batched device dispatch per iteration (see
+    ``_solve_tabu_jax``); ``"numpy"`` is the serial per-start oracle.
+    """
+    if backend == "jax":
+        return _solve_tabu_jax(
+            problem, n_starts, n_iters, tabu_tenure, pool_size, seed
+        )
+    if backend != "numpy":
+        raise ValueError(f"unknown solve_tabu backend {backend!r}")
     L = problem.n
-    rng = np.random.default_rng(seed)
     pool: list[tuple[float, bytes]] = []
     best, best_obj = None, np.inf
 
-    starts = [np.ones(L, dtype=np.float64), np.zeros(L, dtype=np.float64)]
-    while len(starts) < n_starts:
-        starts.append(rng.integers(0, 2, L).astype(np.float64))
-
-    for s_idx, l in enumerate(starts):
+    for s_idx, l in enumerate(_tabu_starts(problem, n_starts, seed)):
         l = l.copy()
         rho = 1.0
         tabu = np.zeros(L, dtype=np.int64)
@@ -283,18 +398,7 @@ def solve_tabu(
             if move_gain <= 1e-12 and it > 20 and rho > 100:
                 break
 
-    if best is None:
-        return SolveResult(None, np.inf, np.empty((0, L), dtype=np.uint8), "tabu")
-    seen = {}
-    for obj, key in sorted(pool):
-        if key not in seen:
-            seen[key] = obj
-        if len(seen) >= pool_size:
-            break
-    pool_arr = np.stack(
-        [np.frombuffer(k, dtype=np.uint8) for k in seen]
-    ) if seen else np.empty((0, L), dtype=np.uint8)
-    return SolveResult(best, best_obj, pool_arr, "tabu")
+    return _tabu_pool_result(pool, best, best_obj, pool_size, L)
 
 
 def solve_bnb(
@@ -371,7 +475,7 @@ def solve(
     """Dispatch: exact enumeration when tractable, tabu otherwise."""
     if problem.n <= 16:
         return solve_enumerate(problem, pool_size=pool_size, backend=backend)
-    return solve_tabu(problem, seed=seed, pool_size=pool_size)
+    return solve_tabu(problem, seed=seed, pool_size=pool_size, backend=backend)
 
 
 def solve_pool(

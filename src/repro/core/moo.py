@@ -139,6 +139,10 @@ def nsga2(
     crossover_p: float = 0.9,
     mutation_p: float | None = None,
     eval_viol_fn: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]] | None = None,
+    backend: str = "numpy",
+    objs_device_fn: Callable | None = None,
+    max_behav: float | None = None,
+    max_ppa: float | None = None,
 ) -> GAResult:
     """NSGA-II for binary chromosomes; ``eval_fn`` maps (B, L) -> (B, n_obj).
 
@@ -147,7 +151,42 @@ def nsga2(
     surrogate (``repro.core.fastchar.compile_surrogate_batch``) evaluate each
     generation in one device dispatch.  When given it replaces both ``eval_fn``
     and ``violation_fn``.
+
+    ``backend="jax"`` runs the *whole* GA -- operators, sorting, environmental
+    selection, archive hypervolume -- as one compiled device program
+    (``repro.core.fastmoo``).  It requires ``objs_device_fn``, a pure jnp
+    ``(B, L) -> (B, 2)`` objective closure (e.g.
+    ``fastchar.surrogate_objs_device`` or the ``.objs_fn`` attribute of
+    ``compile_surrogate_batch``'s result), with optional constraint bounds
+    ``max_behav``/``max_ppa`` (the normalized-overflow violation used by the
+    DSE layer).  RNG streams differ from numpy's, so results match the numpy
+    oracle in hypervolume, not bit-for-bit.
     """
+    if backend == "jax":
+        from .fastmoo import UNBOUNDED, nsga2_jax  # lazy JAX import
+
+        if objs_device_fn is None:
+            raise ValueError("backend='jax' requires objs_device_fn")
+        if violation_fn is not None or eval_viol_fn is not None:
+            raise ValueError(
+                "backend='jax' evaluates constraints on device: pass "
+                "max_behav/max_ppa bounds instead of violation_fn/eval_viol_fn"
+            )
+        return nsga2_jax(
+            objs_device_fn,
+            n_bits=n_bits,
+            pop_size=pop_size,
+            n_gen=n_gen,
+            seed=seed,
+            initial_population=initial_population,
+            hv_ref=hv_ref,
+            crossover_p=crossover_p,
+            mutation_p=mutation_p,
+            max_behav=UNBOUNDED if max_behav is None else max_behav,
+            max_ppa=UNBOUNDED if max_ppa is None else max_ppa,
+        )
+    if backend != "numpy":
+        raise ValueError(f"unknown nsga2 backend {backend!r}")
     rng = np.random.default_rng(seed)
     mutation_p = mutation_p if mutation_p is not None else 1.0 / n_bits
     if eval_fn is None and eval_viol_fn is None:

@@ -1,0 +1,113 @@
+"""Pallas tiled dominance-count kernel for the device NSGA-II engine (fastmoo).
+
+Non-dominated sorting is the per-generation hot spot of an on-device NSGA-II:
+every front-peeling round needs, for each point, the number of still-active
+points that constraint-dominate it.  The naive formulation compares all pairs
+at once and materializes a ``(P, P, n_obj)`` comparison tensor; this kernel
+computes the same counts tile-by-tile so only a ``(Tj, Ti)`` comparison tile
+ever exists at a time, mirroring ``char_kernels``/``app_kernels`` (interpret
+mode is the validated CPU path, the XLA twin in ``core.fastmoo`` is the
+off-TPU fast path).
+
+Constraint domination (matching ``moo.fast_nondominated_sort``): j dominates i
+iff
+
+  * both feasible (viol <= 0) and j's objectives weakly dominate i's with at
+    least one strict improvement, or
+  * j is feasible and i is not, or
+  * both infeasible and viol_j < viol_i.
+
+Inputs are passed twice (row tile and column tile of the same arrays), like a
+self-attention kernel:
+
+  objs: (P, n_obj) f32,  viol: (P, 1) f32,  active: (P, 1) i32 mask -- only
+  active *dominators* are counted (every row of the output is computed).
+
+Output: (P, 1) int32 -- per-point count of active dominators.  Grid is
+``(P // tile, P // tile)``; the j axis accumulates into the output block
+(``@pl.when(j == 0)`` init), the standard revisiting-output reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dominance_counts_pallas"]
+
+
+def _kernel(oi_ref, vi_ref, oj_ref, vj_ref, aj_ref, out_ref, *, n_obj: int):
+    """One (i, j) step: count active j-tile dominators of each i-tile point."""
+    j = pl.program_id(1)
+
+    vi = vi_ref[...][:, 0]                       # (Ti,)
+    vj = vj_ref[...][:, 0]                       # (Tj,)
+    fi = vi <= 0.0
+    fj = vj <= 0.0
+
+    le = None
+    lt = None
+    for k in range(n_obj):                       # static unroll over objectives
+        ok_i = oi_ref[...][:, k]                 # (Ti,)
+        ok_j = oj_ref[...][:, k]                 # (Tj,)
+        le_k = ok_j[:, None] <= ok_i[None, :]    # (Tj, Ti)
+        lt_k = ok_j[:, None] < ok_i[None, :]
+        le = le_k if le is None else le & le_k
+        lt = lt_k if lt is None else lt | lt_k
+
+    obj_dom = le & lt
+    both_feas = fj[:, None] & fi[None, :]
+    both_infeas = (~fj)[:, None] & (~fi)[None, :]
+    dom = (both_feas & obj_dom)
+    dom |= fj[:, None] & (~fi)[None, :]
+    dom |= both_infeas & (vj[:, None] < vi[None, :])
+
+    act = aj_ref[...][:, 0] != 0                 # (Tj,)
+    part = (dom & act[:, None]).astype(jnp.int32).sum(axis=0)[:, None]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def dominance_counts_pallas(
+    objs: jnp.ndarray,            # (P, n_obj) f32
+    viol: jnp.ndarray,            # (P,) f32
+    active: jnp.ndarray,          # (P,) bool/i32 -- dominators to count
+    tile: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-point count of active constraint-dominators: (P,) int32.
+
+    P must divide by ``tile`` (fastmoo's populations are powers of two; pad
+    with inactive +inf-violation points otherwise).
+    """
+    p, n_obj = objs.shape
+    assert p % tile == 0, (p, tile)
+    v2 = viol.astype(jnp.float32).reshape(p, 1)
+    a2 = active.astype(jnp.int32).reshape(p, 1)
+
+    grid = (p // tile, p // tile)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_obj=n_obj),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n_obj), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, n_obj), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        interpret=interpret,
+    )(objs.astype(jnp.float32), v2, objs.astype(jnp.float32), v2, a2)
+    return out[:, 0]

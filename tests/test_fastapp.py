@@ -283,3 +283,25 @@ def test_dse_settings_backend_validated_eagerly():
         DSESettings(backend="torch")
     for ok in ("numpy", "jax"):
         assert DSESettings(backend=ok).backend == ok
+
+
+def test_characterized_dataset_multi_matches_per_app():
+    """One shared table pass per chunk == four one-app-at-a-time passes."""
+    from repro.apps.base import characterized_dataset_multi
+    from repro.core.dataset import Dataset
+
+    spec = spec_for(4)
+    cfgs = np.concatenate([gen_random(spec, 9, seed=3), accurate_config(spec)[None]])
+    base = Dataset(configs=cfgs, metrics={}, source=np.zeros(len(cfgs)))
+    apps = [small_app(n) for n in ("ecg", "mnist", "gauss", "ffn")]
+    for backend in ("numpy", "jax"):
+        multi = characterized_dataset_multi(apps, spec, base, backend=backend, batch=4)
+        for app in apps:
+            want = app.characterized_dataset(spec, base, backend=backend)
+            key = app.behav_metric_name()
+            np.testing.assert_allclose(
+                multi.metrics[key], want.metrics[key], rtol=1e-9, atol=1e-12,
+                err_msg=f"{app.name} {backend}",
+            )
+    with pytest.raises(ValueError):
+        characterized_dataset_multi(apps, spec, base, backend="torch")

@@ -1,0 +1,346 @@
+"""fastmoo parity: the device NSGA-II engine vs the numpy oracle GA.
+
+The engine's contract is *behavioral*: identical operators (constraint-
+dominated sorting, crowding, binary tournament, single-point crossover,
+bit-flip mutation, rank-then-crowding environmental selection) and an exact
+on-device feasible-archive hypervolume -- but ``jax.random`` streams differ
+from numpy's, so end-to-end runs are asserted at hypervolume parity (<= 2% on
+seeded surrogate-driven runs), while every deterministic building block
+(ranks, crowding, hypervolume, dominance counts) must match the oracle
+exactly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastmoo
+from repro.core.moo import (
+    crowding_distance,
+    fast_nondominated_sort,
+    hypervolume_2d,
+    nsga2,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_objs_viol(n, seed, infeas_p=0.4):
+    rng = np.random.default_rng(seed)
+    objs = rng.random((n, 2))
+    viol = np.where(rng.random(n) < infeas_p, rng.random(n), 0.0)
+    return objs, viol
+
+
+# ---------------------------------------------------------------------------
+# Deterministic building blocks: exact parity with moo.py
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_constraint_ranks_match_oracle(seed):
+    objs, viol = _rand_objs_viol(48, seed)
+    want = fast_nondominated_sort(objs, viol)
+    got = np.asarray(
+        fastmoo.constraint_ranks(
+            jnp.asarray(objs, jnp.float32), jnp.asarray(viol, jnp.float32)
+        )
+    )
+    np.testing.assert_array_equal(want, got)
+
+
+def test_constraint_ranks_all_feasible_and_all_infeasible():
+    objs, _ = _rand_objs_viol(32, 3, infeas_p=0.0)
+    for viol in (np.zeros(32), 0.1 + np.random.default_rng(3).random(32)):
+        want = fast_nondominated_sort(objs, viol)
+        got = np.asarray(
+            fastmoo.constraint_ranks(
+                jnp.asarray(objs, jnp.float32), jnp.asarray(viol, jnp.float32)
+            )
+        )
+        np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_crowding_matches_oracle_per_front(seed):
+    objs, viol = _rand_objs_viol(40, seed)
+    rank = fast_nondominated_sort(objs, viol)
+    want = np.zeros(40)
+    for r in np.unique(rank):
+        idx = np.where(rank == r)[0]
+        want[idx] = crowding_distance(objs[idx])
+    got = np.asarray(
+        fastmoo.crowding_distance_jax(
+            jnp.asarray(objs, jnp.float32), jnp.asarray(rank, jnp.int32)
+        )
+    )
+    np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(want[fin], got[fin], rtol=1e-5)
+
+
+def test_crowding_constant_objective_column():
+    objs = np.stack([np.linspace(0, 1, 6), np.full(6, 0.3)], axis=-1)
+    rank = np.zeros(6, np.int64)
+    want = crowding_distance(objs)
+    got = np.asarray(
+        fastmoo.crowding_distance_jax(
+            jnp.asarray(objs, jnp.float32), jnp.asarray(rank, jnp.int32)
+        )
+    )
+    np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(want[fin], got[fin], rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_hypervolume_matches_oracle(seed):
+    objs, viol = _rand_objs_viol(60, seed, infeas_p=0.5)
+    ref = np.array([1.2, 1.1])
+    want = hypervolume_2d(objs[viol <= 0], ref)
+    got = float(
+        fastmoo.hypervolume_2d_jax(
+            jnp.asarray(objs, jnp.float32),
+            jnp.asarray(viol <= 0),
+            jnp.asarray(ref, jnp.float32),
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_device_hypervolume_duplicates_and_empty():
+    ref = np.array([1.0, 1.0])
+    pts = np.array([[0.5, 0.5], [0.5, 0.5], [2.0, 2.0]])
+    got = float(
+        fastmoo.hypervolume_2d_jax(
+            jnp.asarray(pts, jnp.float32),
+            jnp.ones(3, bool),
+            jnp.asarray(ref, jnp.float32),
+        )
+    )
+    np.testing.assert_allclose(got, 0.25, rtol=1e-6)
+    # nothing valid -> zero volume
+    assert float(
+        fastmoo.hypervolume_2d_jax(
+            jnp.asarray(pts, jnp.float32),
+            jnp.zeros(3, bool),
+            jnp.asarray(ref, jnp.float32),
+        )
+    ) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Pallas dominance-count kernel (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tile", [16, 64])
+def test_dominance_counts_pallas_matches_matrix(tile):
+    from repro.kernels.moo_kernels import dominance_counts_pallas
+
+    objs, viol = _rand_objs_viol(64, 4)
+    active = np.random.default_rng(4).random(64) < 0.7
+    dom = np.asarray(
+        fastmoo.dominance_matrix(
+            jnp.asarray(objs, jnp.float32), jnp.asarray(viol, jnp.float32)
+        )
+    )
+    want = (dom & active[:, None]).sum(0)
+    got = np.asarray(
+        dominance_counts_pallas(
+            jnp.asarray(objs, jnp.float32),
+            jnp.asarray(viol, jnp.float32),
+            jnp.asarray(active),
+            tile=tile,
+            interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("n", [64, 96, 40])  # 96/40: tile-padding paths
+def test_pallas_rank_impl_matches_xla(n):
+    objs, viol = _rand_objs_viol(n, 5)
+    o = jnp.asarray(objs, jnp.float32)
+    v = jnp.asarray(viol, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(fastmoo.constraint_ranks(o, v, impl="xla")),
+        np.asarray(fastmoo.constraint_ranks(o, v, impl="pallas", interpret=True)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end engine behavior
+# ---------------------------------------------------------------------------
+
+
+def _toy_objs_jax(X):
+    a = X[:, :8].sum(axis=1)
+    b = (1.0 - X[:, 8:]).sum(axis=1)
+    return jnp.stack([a, b], axis=-1)
+
+
+def _toy_objs_np(pop):
+    a = pop[:, :8].sum(axis=1).astype(float)
+    b = (1 - pop[:, 8:]).sum(axis=1).astype(float)
+    return np.stack([a, b], axis=-1)
+
+
+def test_nsga2_jax_toy_hypervolume_parity():
+    ref = np.array([9.0, 9.0])
+    r_np = nsga2(_toy_objs_np, n_bits=16, pop_size=24, n_gen=30, seed=0, hv_ref=ref)
+    r_jx = nsga2(None, n_bits=16, pop_size=24, n_gen=30, seed=0, hv_ref=ref,
+                 backend="jax", objs_device_fn=_toy_objs_jax)
+    # same archive bookkeeping as the oracle
+    assert r_jx.archive_configs.shape == r_np.archive_configs.shape
+    assert [n for n, _ in r_jx.hv_history] == [n for n, _ in r_np.hv_history]
+    hv_np = r_np.hv_history[-1][1]
+    hv_jx = r_jx.hv_history[-1][1]
+    assert abs(hv_jx - hv_np) <= 0.02 * hv_np
+    # hv history is monotone (archive only grows)
+    hvs = [h for _, h in r_jx.hv_history]
+    assert all(b >= a - 1e-6 for a, b in zip(hvs, hvs[1:]))
+
+
+def test_nsga2_jax_seeded_initial_population_is_used():
+    init = np.zeros((4, 16), np.uint8)
+    r = nsga2(None, n_bits=16, pop_size=8, n_gen=1, seed=0, backend="jax",
+              objs_device_fn=_toy_objs_jax, initial_population=init)
+    assert (r.archive_configs[:8].sum(1) == 0).sum() >= 4
+
+
+def test_nsga2_jax_requires_device_fn_and_even_pop():
+    with pytest.raises(ValueError):
+        nsga2(_toy_objs_np, n_bits=16, backend="jax")
+    with pytest.raises(ValueError):
+        fastmoo.CompiledNSGA2(_toy_objs_jax, n_bits=16, pop_size=7)
+    with pytest.raises(ValueError):
+        nsga2(_toy_objs_np, n_bits=16, backend="torch")
+    # host constraint callables would be silently dropped -> rejected
+    with pytest.raises(ValueError, match="max_behav"):
+        nsga2(None, n_bits=16, backend="jax", objs_device_fn=_toy_objs_jax,
+              violation_fn=lambda p: np.zeros(len(p)))
+    with pytest.raises(ValueError, match="max_behav"):
+        nsga2(None, n_bits=16, backend="jax", objs_device_fn=_toy_objs_jax,
+              eval_viol_fn=lambda p: (np.zeros((len(p), 2)), np.zeros(len(p))))
+
+
+def test_nsga2_jax_constraints_shape_archive():
+    """Tight bounds must mark violating archive entries infeasible."""
+    r = nsga2(None, n_bits=16, pop_size=16, n_gen=5, seed=0, backend="jax",
+              objs_device_fn=_toy_objs_jax, max_behav=4.0, max_ppa=4.0)
+    feas = r.archive_viol <= 0
+    assert feas.any()
+    assert (r.archive_objs[feas, 0] <= 4.0 + 1e-6).all()
+    infeas = (r.archive_objs[:, 0] > 4.0 + 1e-6)
+    assert (r.archive_viol[infeas] > 0).all()
+
+
+def test_sweep_lanes_match_single_runs():
+    runner = fastmoo.CompiledNSGA2(
+        _toy_objs_jax, n_bits=16, pop_size=16, n_gen=8,
+        hv_ref=np.array([9.0, 9.0]),
+    )
+    seeds = [0, 1, 0]
+    bounds = [(1e30, 1e30), (1e30, 1e30), (5.0, 5.0)]
+    lanes = runner.run_sweep(seeds, bounds)
+    for seed, (mb, mp), lane in zip(seeds, bounds, lanes):
+        single = runner.run(seed=seed, max_behav=mb, max_ppa=mp)
+        np.testing.assert_array_equal(lane.archive_configs, single.archive_configs)
+        np.testing.assert_allclose(
+            lane.archive_objs, single.archive_objs, rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            [h for _, h in lane.hv_history],
+            [h for _, h in single.hv_history],
+            rtol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-driven runs through the DSE layer (8-bit acceptance parity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted8():
+    from repro.core.automl import fit_estimators
+    from repro.core.dataset import BEHAV_KEY, PPA_KEY, build_training_dataset
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(8)
+    ds = build_training_dataset(spec, n_random=150, seed=0, backend="jax")
+    ests = fit_estimators(
+        ds.configs.astype(np.float64),
+        {BEHAV_KEY: ds.metrics[BEHAV_KEY], PPA_KEY: ds.metrics[PPA_KEY]},
+        n_quad=16,
+        seed=0,
+    )
+    return spec, ds, ests
+
+
+@pytest.mark.slow
+def test_hv_parity_8bit_surrogate(fitted8):
+    """Acceptance: feasible-archive hv within 2% of the numpy oracle (L=36)."""
+    from repro.core.dataset import BEHAV_KEY, PPA_KEY
+    from repro.core.fastchar import compile_surrogate_batch
+
+    spec, ds, ests = fitted8
+    mb = float(ds.metrics[BEHAV_KEY].max())
+    mp = float(ds.metrics[PPA_KEY].max())
+    ref = np.array([1.05 * mb, 1.05 * mp])
+    fn = compile_surrogate_batch(ests, BEHAV_KEY, PPA_KEY, mb, mp)
+
+    r_np = nsga2(None, n_bits=spec.n_luts, pop_size=32, n_gen=30, seed=0,
+                 eval_viol_fn=fn, hv_ref=ref)
+    r_jx = nsga2(None, n_bits=spec.n_luts, pop_size=32, n_gen=30, seed=0,
+                 backend="jax", objs_device_fn=fn.objs_fn,
+                 max_behav=mb, max_ppa=mp, hv_ref=ref)
+    hv_np = r_np.hv_history[-1][1]
+    hv_jx = r_jx.hv_history[-1][1]
+    assert hv_np > 0
+    assert abs(hv_jx - hv_np) <= 0.02 * hv_np
+
+
+@pytest.mark.slow
+def test_run_dse_sweep_single_dispatch(fitted8):
+    """Multi-seed / multi-constraint grid end-to-end through run_dse_sweep."""
+    from repro.core.dse import DSESettings, run_dse, run_dse_sweep
+
+    spec, ds, ests = fitted8
+    st = DSESettings(pop_size=16, n_gen=6, n_quad_grid=(0,), pool_size=2,
+                     seed=0, backend="jax")
+    results = run_dse_sweep(
+        spec, ds, "ga", settings=st, seeds=(0, 1), const_sf_grid=(0.5, 1.5),
+        estimators=ests,
+    )
+    assert len(results) == 4
+    sfs = [r.settings.const_sf for r in results]
+    assert sfs == [0.5, 0.5, 1.5, 1.5]
+    assert [r.settings.seed for r in results] == [0, 1, 0, 1]
+    for r in results:
+        assert r.n_evals == 16 * 7
+        assert r.hv_ppf >= 0 and r.hv_vpf >= 0
+    # a sweep lane reproduces the equivalent single run_dse call
+    single = run_dse(spec, ds, "ga", settings=st, estimators=ests)
+    lane = [r for r in results if r.settings.seed == 0][0]
+    assert lane.settings.const_sf == 0.5
+    st05 = DSESettings(pop_size=16, n_gen=6, n_quad_grid=(0,), pool_size=2,
+                       seed=0, backend="jax", const_sf=0.5)
+    single05 = run_dse(spec, ds, "ga", settings=st05, estimators=ests)
+    np.testing.assert_allclose(lane.hv_ppf, single05.hv_ppf, rtol=1e-5)
+
+
+def test_run_dse_ga_backend_numpy_override(fitted8):
+    """backend='jax' + ga_backend='numpy' keeps the host GA (hybrid path)."""
+    from repro.core.dse import DSESettings, run_dse
+
+    spec, ds, ests = fitted8
+    st = DSESettings(pop_size=12, n_gen=3, n_quad_grid=(0,), pool_size=2,
+                     seed=0, backend="jax", ga_backend="numpy")
+    r = run_dse(spec, ds, "ga", settings=st, estimators=ests)
+    assert r.n_evals == 12 * 4
+    with pytest.raises(ValueError):
+        DSESettings(ga_backend="torch")

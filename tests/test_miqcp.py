@@ -76,6 +76,39 @@ def test_solution_pools_are_feasible_and_unique():
             assert len(np.unique(res.pool, axis=0)) == len(res.pool)
 
 
+@pytest.mark.parametrize("n_quad", [0, 4])
+def test_tabu_jax_backend_matches_numpy_pool_contract(n_quad):
+    """The lockstep device tabu must find the numpy path's best solution.
+
+    Starts advance in lockstep (one batched neighborhood dispatch per
+    iteration) instead of serially, so deep pool membership can differ on
+    near-ties; the best config/objective and the pool invariants (feasible,
+    unique, contains the best) are the parity contract.
+    """
+    for prob in _problems(n_quad, 1.0, [0.0, 0.5, 1.0]):
+        t_np = solve_tabu(prob, seed=0)
+        t_jx = solve_tabu(prob, seed=0, backend="jax")
+        assert (t_np.best is None) == (t_jx.best is None)
+        if t_np.best is None:
+            continue
+        scale = abs(t_np.best_obj) + 1e-3
+        assert abs(t_jx.best_obj - t_np.best_obj) <= 1e-6 * scale
+        assert prob.feasible(t_jx.best[None])[0]
+        assert prob.feasible(t_jx.pool).all()
+        assert len(np.unique(t_jx.pool, axis=0)) == len(t_jx.pool)
+        assert (t_jx.pool == t_jx.best).all(axis=1).any()
+        # pool quality: the device pool's best equals the overall best
+        np.testing.assert_allclose(
+            prob.obj.value(t_jx.pool).min(), t_jx.best_obj, atol=1e-9
+        )
+
+
+def test_tabu_unknown_backend_raises():
+    prob = _problems(0, 1.0, [0.5])[0]
+    with pytest.raises(ValueError):
+        solve_tabu(prob, backend="torch")
+
+
 def test_tight_constraints_reduce_feasible_pool():
     loose = _problems(0, 1.5, [0.5])[0]
     tight = _problems(0, 0.2, [0.5])[0]

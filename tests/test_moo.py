@@ -77,6 +77,55 @@ def test_nsga2_improves_hypervolume_on_toy_problem():
     assert hv[-1] > 0.9 * 81  # near-full front discovered
 
 
+def test_nondominated_sort_all_infeasible_ranks_by_violation():
+    """With no feasible point, fronts follow pure violation ordering."""
+    objs = np.array([[0.0, 0.0], [9.0, 9.0], [5.0, 5.0], [1.0, 1.0]])
+    viol = np.array([0.4, 0.1, 0.2, 0.3])
+    rank = fast_nondominated_sort(objs, viol)
+    # smaller violation dominates regardless of objectives
+    np.testing.assert_array_equal(rank, np.argsort(np.argsort(viol)))
+
+
+def test_nondominated_sort_duplicate_points_share_a_front():
+    """Exact duplicates never dominate each other (<= holds, < does not)."""
+    objs = np.array([[1.0, 1.0], [1.0, 1.0], [0.5, 2.0], [2.0, 2.0]])
+    rank = fast_nondominated_sort(objs, np.zeros(4))
+    assert rank[0] == rank[1] == 0
+    assert rank[2] == 0          # incomparable with the duplicates
+    assert rank[3] == 1          # dominated by the duplicates
+
+
+def test_hypervolume_against_bruteforce_grid_oracle():
+    """Monte-Carlo-free oracle: count dominated cells of a fine uniform grid."""
+    rng = np.random.default_rng(7)
+    ref = np.array([1.0, 1.0])
+    for _ in range(3):
+        pts = rng.random((12, 2)) * 0.9
+        n = 400
+        xs = (np.arange(n) + 0.5) / n
+        gx, gy = np.meshgrid(xs, xs, indexing="ij")
+        covered = np.zeros((n, n), dtype=bool)
+        for x, y in pts:
+            covered |= (gx >= x) & (gy >= y)
+        brute = covered.mean()  # fraction of the [0,1]^2 reference box
+        hv = hypervolume_2d(pts, ref)
+        assert abs(hv - brute) < 2.0 / n  # grid discretization error bound
+
+
+def test_crowding_constant_objective_column_contributes_nothing():
+    objs = np.stack([np.arange(5, dtype=float), np.full(5, 2.0)], axis=-1)
+    d = crowding_distance(objs)
+    assert np.isinf(d[0]) and np.isinf(d[-1])
+    # interior distances come only from the varying column (span-normalized)
+    np.testing.assert_allclose(d[1:-1], [0.5, 0.5, 0.5])
+
+
+def test_crowding_all_constant_objectives():
+    objs = np.ones((5, 2))
+    d = crowding_distance(objs)
+    assert np.isinf(d).sum() >= 2 and (d[np.isfinite(d)] == 0).all()
+
+
 def test_nsga2_seeded_initial_population_is_used():
     def eval_fn(pop):
         return np.stack([pop.sum(1).astype(float), (1 - pop).sum(1).astype(float)], -1)

@@ -1,0 +1,115 @@
+"""Multi-device sharded execution: the ExecutionContext scaling curve.
+
+Measures the two ROADMAP sharding items over 1/2/4/8-device meshes:
+
+  * config-sharded characterization (``fastchar.behav_partials`` D axis),
+  * lane-sharded GA sweeps (``fastmoo.CompiledNSGA2.run_sweep`` lane axis),
+
+each against the unsharded jax dispatch at the same shape.  On a CPU host the
+devices are *forced host platform devices* carved out of the same cores --
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.run --only shard
+
+-- so the curve measures sharding *overhead* (it cannot beat 1 device without
+real parallel hardware; per-lane/per-config results are asserted bit-identical
+on every mesh size, which is the point of the CI smoke).  On real multi-device
+accelerators the same contexts map the axes onto actual parallelism.
+
+With a single device only the n=1 rows are emitted.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataset import gen_random
+from repro.core.engine import ExecutionContext
+from repro.core.fastchar import behav_metrics_jax
+from repro.core.fastmoo import UNBOUNDED, CompiledNSGA2
+
+from .common import BenchCtx, row
+
+
+def _best_of(fn, n: int = 3) -> float:
+    best = np.inf
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _mesh_sizes() -> list[int]:
+    n = len(jax.devices())
+    return [m for m in (1, 2, 4, 8) if m <= n]
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    rows: list[dict] = []
+    spec = ctx.spec8
+    sizes = _mesh_sizes()
+    rows.append(row("shard.devices_available", 0.0, f"{len(jax.devices())}"))
+
+    # -- config-sharded characterization --------------------------------------
+    d = 256 if ctx.quick else 1024
+    cfgs = gen_random(spec, d, seed=ctx.seed)
+    base = behav_metrics_jax(spec, cfgs, impl="xla")  # warm + reference
+    t1 = None
+    for n in sizes:
+        ectx = ExecutionContext(backend="jax", n_devices=n)
+        run_fn = lambda: behav_metrics_jax(spec, cfgs, ctx=ectx)
+        out = run_fn()  # warm this mesh size + parity check
+        for k in base:
+            np.testing.assert_array_equal(base[k], out[k], err_msg=k)
+        t = _best_of(run_fn)
+        t1 = t if t1 is None else t1
+        rows.append(row(f"shard.char_d{d}_n{n}", t * 1e6,
+                        f"{d / t:.0f} configs/s ({t1 / t:.2f}x vs n=1)"))
+
+    # -- lane-sharded GA sweeps ------------------------------------------------
+    pop, gens = (32, 20) if ctx.quick else (64, 60)
+    lanes = max(sizes)
+    train = ctx.ds8()
+    from repro.core.automl import fit_estimators
+    from repro.core.dataset import BEHAV_KEY, PPA_KEY
+    from repro.core.fastchar import surrogate_objs_device
+
+    est = fit_estimators(
+        train.configs.astype(np.float64),
+        {BEHAV_KEY: train.metrics[BEHAV_KEY], PPA_KEY: train.metrics[PPA_KEY]},
+        n_quad=16, seed=ctx.seed,
+    )
+    objs_fn = surrogate_objs_device(est, BEHAV_KEY, PPA_KEY)
+    ref = np.array([
+        1.05 * train.metrics[BEHAV_KEY].max(),
+        1.05 * train.metrics[PPA_KEY].max(),
+    ])
+    seeds = list(range(lanes))
+    bounds = [(UNBOUNDED, UNBOUNDED)] * lanes
+    t1 = None
+    base_sweep = None
+    for n in sizes:
+        ectx = ExecutionContext(backend="jax", n_devices=n)
+        runner = CompiledNSGA2(
+            objs_fn, n_bits=spec.n_luts, pop_size=pop, n_gen=gens,
+            hv_ref=ref, ctx=ectx,
+        )
+        out = runner.run_sweep(seeds, bounds)  # warm + parity check
+        if base_sweep is None:
+            base_sweep = out
+        else:
+            for a, b in zip(base_sweep, out):
+                np.testing.assert_array_equal(a.archive_configs, b.archive_configs)
+        t = _best_of(lambda: runner.run_sweep(seeds, bounds), n=2)
+        t1 = t if t1 is None else t1
+        rows.append(row(
+            f"shard.sweep_{lanes}lanes_p{pop}g{gens}_n{n}", t * 1e6,
+            f"{lanes / t:.2f} lanes/s ({t1 / t:.2f}x vs n=1)",
+        ))
+    return rows

@@ -29,6 +29,7 @@ BENCHES = [
     "fastchar",       # batched characterization engine vs numpy oracle
     "fastapp",        # batched application-BEHAV engine vs numpy oracle
     "fastmoo",        # device NSGA-II engine vs numpy oracle GA
+    "shard",          # multi-device ExecutionContext scaling (forced host devs)
 ]
 
 

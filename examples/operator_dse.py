@@ -2,15 +2,21 @@
 
   PYTHONPATH=src python examples/operator_dse.py [--const-sf 0.5] [--gens 40]
   PYTHONPATH=src python examples/operator_dse.py --app mnist --backend jax
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python examples/operator_dse.py --backend jax --devices 8
 
 Compares GA-only (AppAxO-style), MaP-only, and MaP+GA (AxOMaP) and prints the
 validated Pareto fronts + hypervolumes, plus the EvoApprox-style frozen-library
 baseline under the same constraints.  ``--app {ecg,mnist,gauss,ffn}`` switches
-the BEHAV objective to an application metric (paper Figs. 16-19);
+the BEHAV objective to an application metric (paper Figs. 16-19).
+
+Execution policy is one ``ExecutionContext`` built from the engine flags:
 ``--backend jax`` runs characterization and application BEHAV through the
 accelerator-native fastchar/fastapp engines (and, by default, the whole
 NSGA-II generation loop through the fastmoo device engine; ``--ga-backend
-numpy`` keeps the host GA while characterizing on device).
+numpy`` keeps the host GA while characterizing on device); ``--devices N``
+shards the ``--shard`` axes (config batches and/or sweep lanes) over a 1-D
+mesh of the first N devices.
 """
 
 import argparse
@@ -26,6 +32,7 @@ from repro.core.dse import (
     map_solution_pool,
     run_dse,
 )
+from repro.core.engine import SHARD_AXES, ExecutionContext
 from repro.core.moo import hypervolume_2d
 from repro.core.operator_model import spec_for
 
@@ -42,14 +49,36 @@ def main():
     ap.add_argument("--ga-backend", choices=("numpy", "jax"), default=None,
                     help="NSGA-II engine (default: follow --backend; 'jax' runs "
                          "the whole generation loop as one compiled dispatch)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard over the first N JAX devices (requires "
+                         "--backend jax; on CPU hosts force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--shard", choices=SHARD_AXES + ("all",), default="all",
+                    help="which batch axes ride the mesh: 'configs' "
+                         "(characterization/app scoring), 'lanes' (sweep "
+                         "lanes), or both (default)")
+    ap.add_argument("--kernel-impl", choices=("xla", "pallas", "gemm"),
+                    default=None, help="preferred kernel impl where an engine "
+                                       "offers a menu (default: auto)")
     args = ap.parse_args()
+
+    ctx = ExecutionContext(
+        backend=args.backend,
+        ga_backend=args.ga_backend,
+        n_devices=args.devices,
+        shard_axes=SHARD_AXES if args.shard == "all" else (args.shard,),
+        kernel_impl=args.kernel_impl,
+    )
+    if ctx.device_count > 1:
+        print(f"execution: {ctx.backend} on {ctx.device_count} devices, "
+              f"sharding {','.join(ctx.shard_axes)}")
 
     spec = spec_for(8)
     print(f"signed 8x8 multiplier: L={spec.n_luts} -> 2^36 designs")
     ds = build_training_dataset(
         spec, n_random=args.n_random, seed=0,
         cache_path=f"experiments/cache/ds8_{args.n_random}_0.npz",
-        backend=args.backend,
+        backend=ctx,
     )
     print(f"training dataset: {len(ds)} characterized configs")
 
@@ -58,14 +87,13 @@ def main():
     if args.app is not None:
         app = APPLICATIONS[args.app]()
         behav_key = app.behav_metric_name()
-        ds = app.characterized_dataset(spec, ds, backend=args.backend)
+        ds = app.characterized_dataset(spec, ds, backend=ctx)
         print(f"application target: {args.app} (BEHAV = {behav_key}, "
               f"backend = {args.backend})")
 
     st = DSESettings(const_sf=args.const_sf, pop_size=48, n_gen=args.gens,
                      n_quad_grid=(0, 4, 16), pool_size=6, seed=0,
-                     behav_key=behav_key, backend=args.backend,
-                     ga_backend=args.ga_backend)
+                     behav_key=behav_key, context=ctx)
     ref = hv_reference(ds, st)
     pool = map_solution_pool(spec, ds, st)
     print(f"MaP pool: {len(pool)} configs (const_sf={args.const_sf})")
@@ -79,11 +107,11 @@ def main():
 
     lib = fixed_library(spec)
     if app is not None:
-        objs = app.characterize_fn(spec, backend=args.backend)(lib)
+        objs = app.characterize_fn(spec, backend=ctx)(lib)
     else:
         from repro.core.dataset import characterize
 
-        objs = characterize(spec, lib, backend=args.backend).objectives()
+        objs = characterize(spec, lib, backend=ctx).objectives()
     max_b = args.const_sf * ds.metrics[behav_key].max()
     max_p = args.const_sf * ds.metrics[PPA_KEY].max()
     feas = (objs[:, 0] <= max_b) & (objs[:, 1] <= max_p)

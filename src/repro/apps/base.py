@@ -103,17 +103,19 @@ class AxOApplication:
         spec: OperatorSpec,
         configs: np.ndarray,
         batch: int = 128,
-        backend: str = "numpy",
+        backend="numpy",
     ) -> np.ndarray:
-        """(D, L) configs -> (D,) BEHAV.  ``backend="jax"`` builds the product
-        tables on device and scores them through the fastapp engine; the
-        default ``"numpy"`` path is the oracle."""
-        if backend == "jax":
+        """(D, L) configs -> (D,) BEHAV.  ``backend`` is a legacy string or an
+        ``ExecutionContext``; the jax backend builds the product tables on
+        device and scores them through the fastapp engine (config-sharded over
+        the context's mesh when one is set); ``"numpy"`` is the oracle."""
+        from ..core.engine import as_context
+
+        ctx = as_context(backend)
+        if ctx.is_jax:
             from .fastapp import app_behav_jax  # lazy: keeps numpy path JAX-free
 
-            return app_behav_jax(self, spec, configs, batch=batch)
-        if backend != "numpy":
-            raise ValueError(f"unknown backend {backend!r}")
+            return app_behav_jax(self, spec, configs, batch=batch, ctx=ctx)
         configs = np.atleast_2d(np.asarray(configs))
         out = np.empty(len(configs), dtype=np.float64)
         for lo in range(0, len(configs), batch):
@@ -126,7 +128,7 @@ class AxOApplication:
         return float(self.behav(spec, accurate_config(spec)[None])[0])
 
     def characterized_dataset(
-        self, spec: OperatorSpec, base: Dataset, backend: str = "numpy"
+        self, spec: OperatorSpec, base: Dataset, backend="numpy"
     ) -> Dataset:
         """Attach this app's BEHAV metric to an existing characterized dataset."""
         metrics = dict(base.metrics)
@@ -134,7 +136,7 @@ class AxOApplication:
         return Dataset(configs=base.configs, metrics=metrics, source=base.source)
 
     def characterize_fn(
-        self, spec: OperatorSpec, ppa_key: str = "PDPLUT", backend: str = "numpy"
+        self, spec: OperatorSpec, ppa_key: str = "PDPLUT", backend="numpy"
     ):
         """(D, L) -> (D, 2) [app BEHAV, operator PPA] for dse.run_dse."""
 
@@ -150,7 +152,7 @@ def characterized_dataset_multi(
     apps,
     spec: OperatorSpec,
     base: Dataset,
-    backend: str = "numpy",
+    backend="numpy",
     batch: int = 128,
 ) -> Dataset:
     """Attach *every* app's BEHAV metric with one shared table pass per chunk.
@@ -163,15 +165,18 @@ def characterized_dataset_multi(
     ``"numpy"`` the host product tables are likewise built once per chunk.
     Per-app results are identical to the one-app-at-a-time path.
     """
+    from ..core.engine import as_context
+
+    ctx = as_context(backend)
     apps = list(apps)
     metrics = dict(base.metrics)
-    if backend == "jax":
+    if ctx.is_jax:
         from .fastapp import multi_app_behav_jax  # lazy: keeps numpy path JAX-free
 
-        vals = multi_app_behav_jax(apps, spec, base.configs, batch=batch)
+        vals = multi_app_behav_jax(apps, spec, base.configs, batch=batch, ctx=ctx)
         for app in apps:
             metrics[app.behav_metric_name()] = vals[app.name]
-    elif backend == "numpy":
+    else:
         configs = np.atleast_2d(np.asarray(base.configs))
         d = len(configs)
         out = {app.name: np.empty(d, dtype=np.float64) for app in apps}
@@ -182,6 +187,4 @@ def characterized_dataset_multi(
                 out[app.name][lo:hi] = app.behav_from_tables(tables)
         for app in apps:
             metrics[app.behav_metric_name()] = out[app.name]
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
     return Dataset(configs=base.configs, metrics=metrics, source=base.source)

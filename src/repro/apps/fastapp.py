@@ -29,6 +29,12 @@ counts, filtered signals, conv outputs) on the host in float64 with exactly
 the oracle's expressions, which keeps every app BEHAV metric bit-identical to
 the numpy path (count-based *and* float).
 
+Execution policy rides on the :class:`TableBatch` itself: ``table_batch(...,
+ctx=ExecutionContext(...))`` gives every primitive scoring that batch the same
+kernel-impl preference and config-axis mesh sharding (``shard_map`` over the D
+axis; per-config scores are independent, so sharded results are bit-identical
+to the unsharded dispatch).
+
 Everything is opt-in: importing this module pulls in JAX; ``repro.apps``
 modules import it lazily when a caller passes ``backend="jax"``.
 """
@@ -36,6 +42,7 @@ modules import it lazily when a caller passes ``backend="jax"``.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -43,6 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..core.engine import MESH_AXIS, ExecutionContext
 from ..core.fastchar import _device_tables, _gather_small
 from ..core.operator_model import OperatorSpec, config_to_masks, spec_for
 
@@ -98,6 +106,7 @@ class TableBatch:
 
     masks: jnp.ndarray | None        # (D, R) int32, None when built from tables
     n_bits: int
+    ctx: ExecutionContext | None = None  # execution policy for the primitives
     _small: jnp.ndarray | None = field(default=None, repr=False)
     _tables: jnp.ndarray | None = field(default=None, repr=False)
 
@@ -132,11 +141,18 @@ class TableBatch:
         return self._tables
 
 
-def table_batch(spec: OperatorSpec, configs: np.ndarray) -> TableBatch:
-    """(D, L) {0,1} configs -> device TableBatch for this operator family."""
+def table_batch(
+    spec: OperatorSpec, configs: np.ndarray, ctx: ExecutionContext | None = None
+) -> TableBatch:
+    """(D, L) {0,1} configs -> device TableBatch for this operator family.
+
+    The batch carries ``ctx`` so every primitive scoring it inherits the same
+    execution policy (kernel impl preference, config-axis mesh sharding)
+    without each app head having to thread a context through its signature.
+    """
     configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
     masks = jnp.asarray(config_to_masks(spec, configs).astype(np.int32))
-    return TableBatch(masks=masks, n_bits=spec.n_bits)
+    return TableBatch(masks=masks, n_bits=spec.n_bits, ctx=ctx)
 
 
 def _as_batch(tables) -> TableBatch:
@@ -319,6 +335,10 @@ def _conv2d_take(tables, img, kern, d_chunk: int):
 
 def _resolve_impl(impl: str | None, batch: TableBatch, k: int) -> str:
     explicit = impl is not None
+    if impl is None and batch.ctx is not None:
+        # context preference is auto-with-preference, not a hard per-call ask:
+        # it may still fall back when the named impl cannot run this batch
+        impl = batch.ctx.resolve_impl(MATMUL_IMPLS)
     impl = default_matmul_impl() if impl is None else impl
     if impl not in MATMUL_IMPLS:
         raise ValueError(f"unknown fastapp impl {impl!r}")
@@ -334,6 +354,78 @@ def _resolve_impl(impl: str | None, batch: TableBatch, k: int) -> str:
             )
         impl = "xla"  # auto-selection falls back to the gather path
     return impl
+
+
+def _config_mesh_ctx(batch: TableBatch, d: int) -> ExecutionContext | None:
+    """The batch's context iff it shards 'configs' and ``d`` divides evenly."""
+    ctx = batch.ctx
+    if ctx is None or not ctx.shards("configs") or d % ctx.device_count:
+        return None
+    return ctx
+
+
+# Cached jit(shard_map(primitive)) builders, keyed by (frozen) context plus
+# the closure's static parameters -- building a fresh shard_map per call would
+# retrace and recompile every dispatch.
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_matmul_gemm(ctx: ExecutionContext, n_bits: int):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        lambda s, a, b: _matmul_gemm(s, a, b, n_bits),
+        in_specs=(P(None, MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_matmul_take_shared(ctx: ExecutionContext, d_chunk: int):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        lambda t, a, b: _matmul_take_shared(t, a, b, d_chunk),
+        in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_matmul_take_batched(ctx: ExecutionContext, d_chunk: int):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        lambda t, a, b: _matmul_take_batched(t, a, b, d_chunk),
+        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P()), out_specs=P(MESH_AXIS),
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_contract_gemm_flat(ctx: ExecutionContext, n_bits: int):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        lambda s, w, v: _contract_gemm_flat(s, w, v, n_bits),
+        in_specs=(P(None, MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_conv1d_take(ctx: ExecutionContext):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        _conv1d_take, in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_conv2d_take(ctx: ExecutionContext, d_chunk: int):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(ctx.shard_call(
+        lambda t, im, kk: _conv2d_take(t, im, kk, d_chunk),
+        in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+    ))
 
 
 def table_matmul_jax(
@@ -356,8 +448,11 @@ def table_matmul_jax(
     b = jnp.asarray(b_codes, jnp.int32)
     d = len(batch)
     impl = _resolve_impl(impl, batch, a.shape[-1])
+    mesh_ctx = _config_mesh_ctx(batch, d)
 
     if a.ndim == 2 and impl == "gemm":
+        if mesh_ctx is not None:
+            return _sharded_matmul_gemm(mesh_ctx, batch.n_bits)(batch.small, a, b)
         return _matmul_gemm(batch.small, a, b, batch.n_bits)
 
     if a.ndim == 2 and impl == "pallas":
@@ -375,6 +470,13 @@ def table_matmul_jax(
             batch.tables.reshape(d, -1), a, b, k_tile=k_tile, interpret=interpret
         )
 
+    if mesh_ctx is not None and impl == "xla":
+        # per-shard chunking: shrink d_chunk so it divides the local slice
+        dc = math.gcd(d // mesh_ctx.device_count, d_chunk)
+        if a.ndim == 3:
+            return _sharded_matmul_take_batched(mesh_ctx, dc)(batch.tables, a, b)
+        return _sharded_matmul_take_shared(mesh_ctx, dc)(batch.tables, a, b)
+
     d_chunk = min(d_chunk, d)
     tp = _pad_leading(batch.tables, d_chunk)
     if a.ndim == 3:
@@ -390,9 +492,16 @@ def table_conv1d_jax(tables, x_codes, h_codes, impl: str | None = None) -> jnp.n
     x = jnp.asarray(x_codes, jnp.int32)
     h = jnp.asarray(h_codes, jnp.int32)
     impl = _resolve_impl(impl, batch, h.shape[0])
+    mesh_ctx = _config_mesh_ctx(batch, len(batch))
     if impl == "gemm":
         win = _windows_1d(x, h.shape[0])
+        if mesh_ctx is not None:
+            return _sharded_contract_gemm_flat(mesh_ctx, batch.n_bits)(
+                batch.small, win, h
+            )
         return _contract_gemm_flat(batch.small, win, h, batch.n_bits)
+    if mesh_ctx is not None and impl == "xla":
+        return _sharded_conv1d_take(mesh_ctx)(batch.tables, x, h)
     return _conv1d_take(batch.tables, x, h)
 
 
@@ -404,15 +513,25 @@ def table_conv2d_jax(
     img = jnp.asarray(img_codes, jnp.int32)
     kern = jnp.asarray(k_codes, jnp.int32)
     impl = _resolve_impl(impl, batch, int(kern.size))
+    d = len(batch)
+    mesh_ctx = _config_mesh_ctx(batch, d)
     if impl == "gemm":
         kh, kw = kern.shape
         win = _windows_2d(img, kh, kw)
         oy, ox = win.shape[0], win.shape[1]
-        out = _contract_gemm_flat(
-            batch.small, win.reshape(oy * ox, kh * kw), kern.reshape(-1), batch.n_bits
-        )
-        return out.reshape(len(batch), oy, ox)
-    d = len(batch)
+        if mesh_ctx is not None:
+            out = _sharded_contract_gemm_flat(mesh_ctx, batch.n_bits)(
+                batch.small, win.reshape(oy * ox, kh * kw), kern.reshape(-1)
+            )
+        else:
+            out = _contract_gemm_flat(
+                batch.small, win.reshape(oy * ox, kh * kw), kern.reshape(-1),
+                batch.n_bits,
+            )
+        return out.reshape(d, oy, ox)
+    if mesh_ctx is not None and impl == "xla":
+        dc = math.gcd(d // mesh_ctx.device_count, d_chunk)
+        return _sharded_conv2d_take(mesh_ctx, dc)(batch.tables, img, kern)
     d_chunk = min(d_chunk, d)
     out = _conv2d_take(_pad_leading(batch.tables, d_chunk), img, kern, d_chunk)
     return out[:d]
@@ -450,7 +569,8 @@ def mismatch_counts(
 
 
 def multi_app_behav_jax(
-    apps, spec: OperatorSpec, configs: np.ndarray, batch: int = 128
+    apps, spec: OperatorSpec, configs: np.ndarray, batch: int = 128,
+    ctx: ExecutionContext | None = None,
 ) -> dict[str, np.ndarray]:
     """(D, L) configs -> {app.name: (D,) BEHAV} with ONE shared TableBatch.
 
@@ -468,17 +588,22 @@ def multi_app_behav_jax(
         hi = min(lo + batch, d)
         cfgs = configs[lo:hi]
         bucket = min(batch, 1 << max(len(cfgs) - 1, 1).bit_length())
+        if ctx is not None and ctx.shards("configs"):
+            # a shard-divisible bucket keeps every chunk on the mesh path
+            bucket = max(bucket, ctx.device_count)
+            bucket += (-bucket) % ctx.device_count
         pad = bucket - len(cfgs)
         if pad:
             cfgs = np.concatenate([cfgs, np.zeros((pad, cfgs.shape[1]), np.uint8)])
-        tb = table_batch(spec, cfgs)
+        tb = table_batch(spec, cfgs, ctx=ctx)
         for app in apps:
             out[app.name][lo:hi] = app.behav_jax_from_tables(tb)[: hi - lo]
     return out
 
 
 def app_behav_jax(
-    app, spec: OperatorSpec, configs: np.ndarray, batch: int = 128
+    app, spec: OperatorSpec, configs: np.ndarray, batch: int = 128,
+    ctx: ExecutionContext | None = None,
 ) -> np.ndarray:
     """(D, L) configs -> (D,) app BEHAV through the device engine.
 
@@ -490,4 +615,6 @@ def app_behav_jax(
     kernels compile at most ~log2(batch) distinct D shapes across a whole DSE
     run, however ragged the validated fronts get.
     """
-    return multi_app_behav_jax([app], spec, configs, batch=batch)[app.name]
+    return multi_app_behav_jax([app], spec, configs, batch=batch, ctx=ctx)[
+        app.name
+    ]

@@ -153,13 +153,15 @@ def characterize(
     synth: SynthesisModel = DEFAULT_SYNTH,
     source: int = 0,
     batch_size: int = 256,
-    backend: str = "numpy",
+    backend="numpy",
 ) -> Dataset:
     """Full characterization (exhaustive BEHAV + simulated-synthesis PPA).
 
-    ``backend="jax"`` evaluates the BEHAV metrics with the batched
-    ``repro.core.fastchar`` engine (PPA stays on the cheap numpy tables); the
-    default ``"numpy"`` path is the bit-exact oracle.
+    ``backend`` is a legacy string or an ``ExecutionContext``; the jax backend
+    evaluates the BEHAV metrics with the batched ``repro.core.fastchar``
+    engine (config-sharded over the context's mesh when one is set; PPA stays
+    on the cheap numpy tables).  The default ``"numpy"`` path is the bit-exact
+    oracle.
     """
     configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
     metrics = dict(
@@ -180,7 +182,7 @@ def build_training_dataset(
     include_pattern: bool = True,
     cache_path: str | None = None,
     include_accurate: bool = True,
-    backend: str = "numpy",
+    backend="numpy",
 ) -> Dataset:
     """RANDOM + PATTERN training dataset (cached to ``cache_path`` if given).
 

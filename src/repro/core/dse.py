@@ -29,6 +29,7 @@ import numpy as np
 from .automl import AutoMLRegressor, fit_estimators
 from .correlation import rank_quadratic_terms
 from .dataset import BEHAV_KEY, PPA_KEY, Dataset, characterize, gen_random
+from .engine import ExecutionContext, as_context
 from .miqcp import MapProblem, build_problems, solve_pool
 from .moo import GAResult, hypervolume_2d, nsga2, pareto_mask
 from .operator_model import OperatorSpec
@@ -53,16 +54,18 @@ CONST_SF_GRID = (0.2, 0.5, 0.8, 1.0, 1.2, 1.5)
 class DSESettings:
     """Knobs shared by every method (defaults sized for the 8x8 operator).
 
-    ``backend`` selects the characterization/surrogate execution engine:
-    ``"numpy"`` (default, the bit-exact oracle) or ``"jax"``, which routes VPF
-    re-characterization through ``repro.core.fastchar``, batches the MaP
-    solver scoring on device, and runs the GA on the device engine.
+    ``context`` is the unified execution policy
+    (:class:`repro.core.engine.ExecutionContext`): backend selection, device
+    mesh + shard axes, kernel-impl preference and PRNG policy, consumed by
+    every engine ``run_dse``/``run_dse_sweep`` touches.
 
-    ``ga_backend`` selects the NSGA-II engine independently: ``None`` follows
-    ``backend``; ``"numpy"`` is the host oracle GA (under ``backend="jax"``
-    its surrogate fitness still compiles to one dispatch per generation);
-    ``"jax"`` runs the whole generation loop on device
-    (``repro.core.fastmoo``; hypervolume-parity with the oracle, RNG differs).
+    ``backend`` / ``ga_backend`` are the legacy string shims: they construct
+    the equivalent context when ``context`` is not given (``"jax"`` routes VPF
+    re-characterization through ``repro.core.fastchar``, batches the MaP
+    solver scoring on device, and runs the GA on ``repro.core.fastmoo``;
+    ``ga_backend=None`` follows ``backend``).  Passing both a context and
+    conflicting strings is an eager error, as is any invalid mesh/axis combo
+    (unknown backend, sharding under numpy, more devices than exist).
     """
 
     ppa_key: str = PPA_KEY
@@ -75,23 +78,39 @@ class DSESettings:
     pool_size: int = 8
     seed: int = 0
     n_estimator_quad: int = 48
-    backend: str = "numpy"
+    backend: str | None = None           # None = follow context (default numpy)
     ga_backend: str | None = None
+    context: ExecutionContext | None = None
 
     def __post_init__(self) -> None:
         # fail at construction, not deep inside characterize with an opaque error
-        if self.backend not in ("numpy", "jax"):
-            raise ValueError(
-                f"backend must be 'numpy' or 'jax', got {self.backend!r}"
+        ctx = self.context
+        if ctx is None:
+            ctx = ExecutionContext(
+                backend=self.backend if self.backend is not None else "numpy",
+                ga_backend=self.ga_backend,
             )
-        if self.ga_backend not in (None, "numpy", "jax"):
-            raise ValueError(
-                f"ga_backend must be None, 'numpy' or 'jax', got {self.ga_backend!r}"
-            )
+        else:
+            if not isinstance(ctx, ExecutionContext):
+                raise TypeError(
+                    f"context must be an ExecutionContext, got {type(ctx).__name__}"
+                )
+            if (self.backend is not None and self.backend != ctx.backend) or (
+                self.ga_backend is not None
+                and self.ga_backend != ctx.resolved_ga_backend
+            ):
+                raise ValueError(
+                    "conflicting execution policy: pass either context= or the "
+                    "legacy backend=/ga_backend= strings, not disagreeing both"
+                )
+        # mirror the context into the legacy string fields for old readers
+        self.context = ctx
+        self.backend = ctx.backend
+        self.ga_backend = ctx.ga_backend
 
     @property
     def resolved_ga_backend(self) -> str:
-        return self.backend if self.ga_backend is None else self.ga_backend
+        return self.context.resolved_ga_backend
 
 
 @dataclass
@@ -128,15 +147,18 @@ def map_solution_pool(
     spec: OperatorSpec,
     train_ds: Dataset,
     settings: DSESettings,
-    backend: str | None = None,
+    backend=None,
 ) -> np.ndarray:
     """Union MaP solution pool over the wt_B x n_quad battery (§4.3.1).
 
-    ``backend`` (default ``settings.backend``) is forwarded to the MaP solvers;
-    under ``"jax"`` the exhaustive-enumeration scoring of each problem runs as
-    one batched device dispatch (``fastchar.map_problem_values_jax``).
+    ``backend`` (default ``settings.context``; a legacy string is also
+    accepted) is forwarded to the MaP solvers; under the jax backend the
+    exhaustive-enumeration scoring of each problem runs as one batched device
+    dispatch (``fastchar.map_problem_values_jax``), and tabu-sized batteries
+    (L > 16) advance all problems' starts in lockstep
+    (``miqcp.solve_tabu_multi``).
     """
-    backend = settings.backend if backend is None else backend
+    backend = as_context(backend, default=settings.context)
     X = train_ds.configs.astype(np.float64)
     yb = train_ds.metrics[settings.behav_key]
     yp = train_ds.metrics[settings.ppa_key]
@@ -240,7 +262,7 @@ def _default_characterize(
     spec: OperatorSpec, settings: DSESettings
 ) -> Callable[[np.ndarray], np.ndarray]:
     def fn(configs: np.ndarray) -> np.ndarray:
-        ds = characterize(spec, configs, backend=settings.backend)
+        ds = characterize(spec, configs, backend=settings.context)
         return ds.objectives(ppa_key=settings.ppa_key, behav_key=settings.behav_key)
 
     return fn
@@ -256,7 +278,8 @@ def _surrogate_eval_viol_jax(
     from .fastchar import compile_surrogate_batch  # lazy JAX import
 
     return compile_surrogate_batch(
-        estimators, settings.behav_key, settings.ppa_key, max_behav, max_ppa
+        estimators, settings.behav_key, settings.ppa_key, max_behav, max_ppa,
+        ctx=settings.context,
     )
 
 
@@ -280,9 +303,10 @@ def run_dse(
     forwarded (the accelerator-native app engine under ``backend="jax"``).
     """
     settings = settings or DSESettings()
+    ctx = settings.context
     if app is not None and characterize_fn is None:
         characterize_fn = app.characterize_fn(
-            spec, ppa_key=settings.ppa_key, backend=settings.backend
+            spec, ppa_key=settings.ppa_key, backend=ctx
         )
     t0 = time.time()
     if estimators is None:
@@ -299,7 +323,7 @@ def run_dse(
     ref = hv_reference(train_ds, settings) if ref is None else ref
     max_behav, max_ppa = _constraint_bounds(train_ds, settings)
 
-    use_jax = settings.backend == "jax"
+    use_jax = ctx.is_jax
     if use_jax:
         eval_viol_fn = _surrogate_eval_viol_jax(estimators, settings, max_behav, max_ppa)
         eval_fn = viol_fn = None
@@ -331,7 +355,7 @@ def run_dse(
     else:
         init = map_pool if method == "map+ga" else None
         ga: GAResult
-        if settings.resolved_ga_backend == "jax":
+        if ctx.resolved_ga_backend == "jax":
             from .fastchar import surrogate_objs_device  # lazy JAX import
 
             objs_fn = (
@@ -349,7 +373,7 @@ def run_dse(
                 seed=settings.seed,
                 initial_population=init,
                 hv_ref=ref,
-                backend="jax",
+                backend=ctx,
                 objs_device_fn=objs_fn,
                 max_behav=max_behav,
                 max_ppa=max_ppa,
@@ -407,8 +431,12 @@ def run_dse_sweep(
     -- re-runs the whole generation loop per lane; here every lane shares one
     ``fastmoo.CompiledNSGA2`` program and the full grid executes as a single
     vmapped device dispatch (estimators fitted once, MaP pools solved once per
-    const_sf for ``method="map+ga"``).  Requires ``ga_backend="jax"``.  Lane
-    order: ``for const_sf in const_sf_grid: for seed in seeds``.
+    const_sf for ``method="map+ga"``, each pool's tabu battery advancing in
+    one cross-problem lockstep batch under a jax context).  Requires a
+    resolved ``ga_backend="jax"``.  When ``settings.context`` shards the
+    ``"lanes"`` axis, the lane batch is split over the context's device mesh
+    (bit-identical per-lane results; host-concat combine).  Lane order:
+    ``for const_sf in const_sf_grid: for seed in seeds``.
     """
     import dataclasses
 
@@ -416,7 +444,8 @@ def run_dse_sweep(
     from .fastmoo import CompiledNSGA2
 
     settings = settings or DSESettings()
-    if settings.resolved_ga_backend != "jax":
+    ctx = settings.context
+    if ctx.resolved_ga_backend != "jax":
         raise ValueError("run_dse_sweep requires ga_backend='jax'")
     if method not in ("ga", "map+ga"):
         raise ValueError(f"unsupported sweep method {method!r}")
@@ -426,7 +455,7 @@ def run_dse_sweep(
     )
     if app is not None and characterize_fn is None:
         characterize_fn = app.characterize_fn(
-            spec, ppa_key=settings.ppa_key, backend=settings.backend
+            spec, ppa_key=settings.ppa_key, backend=ctx
         )
     if estimators is None:
         estimators = fit_estimators(
@@ -447,6 +476,7 @@ def run_dse_sweep(
         pop_size=settings.pop_size,
         n_gen=settings.n_gen,
         hv_ref=ref,
+        ctx=ctx,
     )
 
     lane_settings: list[DSESettings] = []

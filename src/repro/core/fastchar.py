@@ -24,7 +24,14 @@ Also here: jit-compiled batched surrogate evaluation
 (``compile_surrogate_batch``) so one NSGA-II generation is a single device
 dispatch, and batched MaP quadratic-form evaluation
 (``map_problem_values_jax``) used by ``miqcp.solve_enumerate`` under
-``backend="jax"``.
+``backend="jax"``, plus its vmapped cross-problem twin
+(``tabu_neighbor_values_multi_jax``) that scores a whole MaP battery's tabu
+neighborhoods per iteration for ``miqcp.solve_tabu_multi``.
+
+Execution policy comes from :class:`repro.core.engine.ExecutionContext`: a
+context that shards the ``"configs"`` axis splits the (D,) batch of
+``behav_partials`` over its device mesh via ``shard_map`` (bit-identical --
+per-config partials are independent and the int64 host combine is unchanged).
 
 Everything is opt-in: importing this module pulls in JAX; the numpy modules
 only import it lazily when a caller passes ``backend="jax"``.
@@ -39,6 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .engine import MESH_AXIS, ExecutionContext
 from .metrics import BEHAV_METRICS
 from .operator_model import (
     OperatorSpec,
@@ -57,6 +65,7 @@ __all__ = [
     "compile_surrogate_batch",
     "map_problem_values_jax",
     "tabu_neighbor_values_jax",
+    "tabu_neighbor_values_multi_jax",
 ]
 
 
@@ -175,6 +184,42 @@ def _partials_xla(masks: jnp.ndarray, n_bits: int, a_tile: int, d_block: int):
     return merge(int_p), merge(rel_p)
 
 
+def _partials_dispatch(n_bits: int, impl: str, a_tile: int, d_block: int,
+                       interpret: bool | None):
+    """The per-device (or whole-batch) partials computation as a closure."""
+
+    def dispatch(m):
+        if impl == "xla":
+            return _partials_xla(m, n_bits, a_tile, d_block)
+        from ..kernels.char_kernels import behav_stats_pallas
+        from ..kernels.ops import on_tpu
+
+        interp = (not on_tpu()) if interpret is None else interpret
+        _, exact, w, _ = _device_tables(n_bits)
+        small = _gather_small(m, n_bits)
+        return behav_stats_pallas(
+            small, exact, w, d_block=d_block, a_tile=a_tile, interpret=interp
+        )
+
+    return dispatch
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_partials(ctx: ExecutionContext, n_bits: int, impl: str,
+                      a_tile: int, d_block: int, interpret: bool | None):
+    """jit(shard_map(partials)) cached per policy -- a fresh shard_map per call
+    would retrace (and recompile) every dispatch."""
+    from jax.sharding import PartitionSpec as P
+
+    return jax.jit(
+        ctx.shard_call(
+            _partials_dispatch(n_bits, impl, a_tile, d_block, interpret),
+            in_specs=(P(MESH_AXIS),),
+            out_specs=(P(None, MESH_AXIS), P(None, MESH_AXIS)),
+        )
+    )
+
+
 def behav_partials(
     spec: OperatorSpec,
     masks: jnp.ndarray,
@@ -182,22 +227,31 @@ def behav_partials(
     a_tile: int | None = None,
     d_block: int = 8,
     interpret: bool | None = None,
+    ctx: ExecutionContext | None = None,
 ):
-    """Dispatch one device evaluation of a (padded) mask batch -> partials."""
-    a_tile = a_tile or default_a_tile(spec)
-    if impl == "xla":
-        return _partials_xla(masks, spec.n_bits, a_tile, d_block)
-    if impl == "pallas":
-        from ..kernels.char_kernels import behav_stats_pallas
-        from ..kernels.ops import on_tpu
+    """Dispatch one device evaluation of a (padded) mask batch -> partials.
 
-        interpret = (not on_tpu()) if interpret is None else interpret
-        _, exact, w, _ = _device_tables(spec.n_bits)
-        small = _gather_small(masks, spec.n_bits)
-        return behav_stats_pallas(
-            small, exact, w, d_block=d_block, a_tile=a_tile, interpret=interpret
-        )
-    raise ValueError(f"unknown fastchar impl {impl!r}")
+    When ``ctx`` shards the ``"configs"`` axis and the batch divides evenly
+    into ``n_devices x d_block`` blocks, the D axis is ``shard_map``-ped over
+    the context's mesh: each device runs the identical per-chunk reduction on
+    its contiguous config slice, so the (n_ta, D, 8) partials are bit-identical
+    to the unsharded dispatch (the int64 host combine is unchanged).
+    """
+    a_tile = a_tile or default_a_tile(spec)
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown fastchar impl {impl!r}")
+    if ctx is not None and interpret is None:
+        interpret = ctx.interpret
+
+    masks = jnp.asarray(masks)
+    if (
+        ctx is not None
+        and ctx.shards("configs")
+        and masks.shape[0] % (ctx.device_count * d_block) == 0
+    ):
+        fn = _sharded_partials(ctx, spec.n_bits, impl, a_tile, d_block, interpret)
+        return fn(masks)
+    return _partials_dispatch(spec.n_bits, impl, a_tile, d_block, interpret)(masks)
 
 
 def _combine(spec: OperatorSpec, int_p: np.ndarray, rel_p: np.ndarray, d: int):
@@ -227,14 +281,20 @@ def behav_metrics_jax(
     a_tile: int | None = None,
     d_block: int = 8,
     interpret: bool | None = None,
+    ctx: ExecutionContext | None = None,
 ) -> dict[str, np.ndarray]:
     """Exhaustive BEHAV metrics on accelerator; drop-in for ``behav_metrics``.
 
-    ``impl`` defaults to the Pallas kernel on TPU and the jit-compiled XLA twin
-    elsewhere (interpret-mode Pallas is a correctness path, not a fast path).
-    Large batches are chunked by ``batch_size`` configs per dispatch to bound
-    the (D, 2^N, 2^N) int32 working set of the XLA impl.
+    ``impl`` defaults to the context's kernel preference when one applies, then
+    to the Pallas kernel on TPU and the jit-compiled XLA twin elsewhere
+    (interpret-mode Pallas is a correctness path, not a fast path).  Large
+    batches are chunked by ``batch_size`` configs per dispatch to bound the
+    (D, 2^N, 2^N) int32 working set of the XLA impl; under a config-sharded
+    ``ctx`` each chunk is padded to a whole number of per-device blocks and
+    dispatched over the mesh (see :func:`behav_partials`).
     """
+    if impl is None and ctx is not None:
+        impl = ctx.resolve_impl(("xla", "pallas"))
     if impl is None:
         from ..kernels.ops import on_tpu
 
@@ -243,16 +303,19 @@ def behav_metrics_jax(
     d = configs.shape[0]
     masks = config_to_masks(spec, configs).astype(np.int32)
 
+    block = d_block
+    if ctx is not None and ctx.shards("configs"):
+        block = d_block * ctx.device_count
     out = {k: np.empty(d, dtype=np.float64) for k in BEHAV_METRICS}
     for lo_i in range(0, d, batch_size):
         hi_i = min(lo_i + batch_size, d)
         chunk = masks[lo_i:hi_i]
-        pad = (-len(chunk)) % d_block
+        pad = (-len(chunk)) % block
         if pad:
             chunk = np.concatenate([chunk, np.zeros((pad, spec.rows), np.int32)])
         int_p, rel_p = behav_partials(
             spec, jnp.asarray(chunk), impl=impl, a_tile=a_tile,
-            d_block=d_block, interpret=interpret,
+            d_block=d_block, interpret=interpret, ctx=ctx,
         )
         part = _combine(spec, int_p, rel_p, hi_i - lo_i)
         for k in BEHAV_METRICS:
@@ -364,6 +427,7 @@ def compile_surrogate_batch(
     ppa_key: str,
     max_behav: float,
     max_ppa: float,
+    ctx: ExecutionContext | None = None,
 ):
     """jit one (B, L) -> ((B, 2) objectives, (B,) violation) surrogate dispatch.
 
@@ -372,7 +436,12 @@ def compile_surrogate_batch(
     in a single compiled call.  Results are float32; the numpy estimators
     remain the reference implementation.  The underlying device closure is
     exposed as ``fn.objs_fn`` for the fully-fused ``fastmoo`` engine.
+
+    ``ctx`` is accepted for signature uniformity with the other engine entry
+    points; a generation batch is a single small dispatch, so the context's
+    mesh is never consulted here (the GA engine shards *lanes*, not fitness).
     """
+    del ctx  # policy carrier only: no per-batch sharding of surrogate eval
     objs_fn = surrogate_objs_device(estimators, behav_key, ppa_key)
     nb = jnp.float32(max(abs(max_behav), 1e-9))
     np_ = jnp.float32(max(abs(max_ppa), 1e-9))
@@ -457,6 +526,50 @@ def tabu_neighbor_values_jax(problem):
 
     def step(states: np.ndarray):
         vals, deltas = _tabu_step_values(
+            jnp.asarray(states, jnp.float32), const, lin, quad, sym
+        )
+        return np.asarray(vals, np.float64), np.asarray(deltas, np.float64)
+
+    return step
+
+
+# vmap of the jitted per-problem scorer: one dispatch scores every problem's
+# every start's full single-flip neighborhood -- the (problems x starts, L)
+# lockstep batch used by ``miqcp.solve_tabu_multi``.
+_tabu_step_values_multi = jax.jit(jax.vmap(_tabu_step_values))
+
+
+def _expr_stacks(problems):
+    """(P, 3[obj,behav,ppa]) expression-coefficient stacks as jnp f32."""
+    exprs = [(p.obj, p.behav, p.ppa) for p in problems]
+    const = jnp.asarray([[e.const for e in row] for row in exprs], jnp.float32)
+    lin = jnp.asarray(
+        np.stack([np.stack([e.lin for e in row]) for row in exprs]), jnp.float32
+    )
+    quad = jnp.asarray(
+        np.stack([np.stack([e.quad for e in row]) for row in exprs]), jnp.float32
+    )
+    sym = jnp.asarray(
+        np.stack([np.stack([e.quad + e.quad.T for e in row]) for row in exprs]),
+        jnp.float32,
+    )
+    return const, lin, quad, sym
+
+
+def tabu_neighbor_values_multi_jax(problems):
+    """Cross-problem lockstep neighborhood scorer for ``miqcp.solve_tabu_multi``.
+
+    Returns ``step(states (P, S, L)) -> (vals (P, 3, S), deltas (P, 3, S, L))``
+    float64 numpy arrays: the whole MaP battery's every start's single-flip
+    neighborhood scored in ONE device dispatch (a ``vmap`` of the per-problem
+    ``_tabu_step_values`` over the problem axis).  The jitted core is shared
+    across batteries -- coefficients are traced arguments, so a wt_B x n_quad
+    battery compiles once per (P, S, L).
+    """
+    const, lin, quad, sym = _expr_stacks(problems)
+
+    def step(states: np.ndarray):
+        vals, deltas = _tabu_step_values_multi(
             jnp.asarray(states, jnp.float32), const, lin, quad, sym
         )
         return np.asarray(vals, np.float64), np.asarray(deltas, np.float64)

@@ -26,7 +26,13 @@ compiled computation**:
 all inside one jitted ``lax.fori_loop`` fused with the surrogate evaluator.
 A ``vmap`` axis over (seed, constraint-bound) turns a whole multi-restart,
 multi-constraint DSE sweep into a single batched GA dispatch
-(``CompiledNSGA2.run_sweep`` / ``dse.run_dse_sweep``).
+(``CompiledNSGA2.run_sweep`` / ``dse.run_dse_sweep``); under an
+:class:`repro.core.engine.ExecutionContext` that shards the ``"lanes"`` axis,
+that vmapped program is additionally ``shard_map``-ped over the context's
+device mesh (lanes are independent, so per-lane results stay bit-identical
+and the combine is the host concat the caller already does).  The context
+also supplies the PRNG policy (typed keys under a named ``prng_impl``) and
+the default rank-kernel impl.
 
 The numpy ``moo.nsga2`` stays the behavioral oracle: identical operators and
 selection semantics, but ``jax.random`` streams differ from numpy's, so the
@@ -47,6 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .engine import MESH_AXIS, ExecutionContext
 from .moo import GAResult
 
 __all__ = [
@@ -237,13 +244,20 @@ class CompiledNSGA2:
         mutation_p: float | None = None,
         hv_ref: np.ndarray | None = None,
         record_every: int = 10,
-        rank_impl: str = "xla",
+        rank_impl: str | None = None,
         interpret: bool | None = None,
+        ctx: ExecutionContext | None = None,
     ) -> None:
         if pop_size % 2:
             raise ValueError(f"pop_size must be even, got {pop_size}")
+        if rank_impl is None:
+            rank_impl = (
+                ctx.resolve_impl(("xla", "pallas"), "xla") if ctx else "xla"
+            )
         if rank_impl not in ("xla", "pallas"):
             raise ValueError(f"unknown rank_impl {rank_impl!r}")
+        if interpret is None and ctx is not None:
+            interpret = ctx.interpret
         self.n_bits = int(n_bits)
         self.pop_size = int(pop_size)
         self.n_gen = int(n_gen)
@@ -257,9 +271,13 @@ class CompiledNSGA2:
             constraint_ranks, impl=rank_impl, interpret=interpret
         )
         self._objs_fn = objs_fn
+        self._ctx = ctx
+        self._prng_key = ctx.prng_key if ctx is not None else jax.random.PRNGKey
         run = self._build()
+        self._run = run
         self._single = jax.jit(run)
         self._sweep = jax.jit(jax.vmap(run))
+        self._sweep_sharded = None  # built lazily; needs the context's mesh
 
     # -- trace-time program ---------------------------------------------------
 
@@ -412,13 +430,33 @@ class CompiledNSGA2:
         """One full GA run as a single device dispatch."""
         init, k = self._prep_init(initial_population)
         out = self._single(
-            jax.random.PRNGKey(seed),
+            self._prng_key(seed),
             jnp.asarray(init),
             jnp.int32(k),
             jnp.float32(max_behav),
             jnp.float32(max_ppa),
         )
         return self._to_result({k_: np.asarray(v) for k_, v in out.items()})
+
+    def _sharded_sweep(self):
+        """jit(shard_map(vmap(run))): lanes sharded over the context's mesh.
+
+        Each device runs the identical vmapped GA program on its contiguous
+        lane slice -- lanes never interact, so per-lane results are
+        bit-identical to the unsharded vmap and the combine is the host concat
+        the caller already does.
+        """
+        if self._sweep_sharded is None:
+            from jax.sharding import PartitionSpec as P
+
+            self._sweep_sharded = jax.jit(
+                self._ctx.shard_call(
+                    jax.vmap(self._run),
+                    in_specs=P(MESH_AXIS),
+                    out_specs=P(MESH_AXIS),
+                )
+            )
+        return self._sweep_sharded
 
     def run_sweep(
         self,
@@ -431,27 +469,42 @@ class CompiledNSGA2:
         ``seeds``: (S,) ints; ``bounds``: (S, 2) [max_behav, max_ppa] rows;
         ``initial_populations``: optional per-lane seed pools (list of arrays,
         entries may be None/empty).  Returns one GAResult per lane.
+
+        When the context shards the ``"lanes"`` axis, the lane batch is padded
+        (by repeating lane 0) to a whole number of per-device slices and
+        dispatched over the mesh; the padding lanes are dropped on the host.
         """
         seeds = list(seeds)
-        bounds = np.asarray(bounds, np.float64).reshape(len(seeds), 2)
+        n_lanes = len(seeds)
+        bounds = np.asarray(bounds, np.float64).reshape(n_lanes, 2)
         inits, counts = [], []
-        for i in range(len(seeds)):
+        for i in range(n_lanes):
             pool = None if initial_populations is None else initial_populations[i]
             init, k = self._prep_init(pool)
             inits.append(init)
             counts.append(k)
-        keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-        out = self._sweep(
+        keys = jnp.stack([self._prng_key(s) for s in seeds])
+        args = (
             keys,
             jnp.asarray(np.stack(inits)),
             jnp.asarray(np.asarray(counts, np.int32)),
             jnp.asarray(bounds[:, 0], jnp.float32),
             jnp.asarray(bounds[:, 1], jnp.float32),
         )
-        host = {k_: np.asarray(v) for k_, v in out.items()}
+        if self._ctx is not None and self._ctx.shards("lanes"):
+            pad = (-n_lanes) % self._ctx.device_count
+            if pad:
+                args = tuple(
+                    jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
+                    for a in args
+                )
+            out = self._sharded_sweep()(*args)
+        else:
+            out = self._sweep(*args)
+        host = {k_: np.asarray(v)[:n_lanes] for k_, v in out.items()}
         return [
             self._to_result({k_: v[i] for k_, v in host.items()})
-            for i in range(len(seeds))
+            for i in range(n_lanes)
         ]
 
 
@@ -467,7 +520,8 @@ def nsga2_jax(
     mutation_p: float | None = None,
     max_behav: float = UNBOUNDED,
     max_ppa: float = UNBOUNDED,
-    rank_impl: str = "xla",
+    rank_impl: str | None = None,
+    ctx: ExecutionContext | None = None,
 ) -> GAResult:
     """One-shot convenience wrapper; ``moo.nsga2(backend="jax")`` lands here.
 
@@ -483,6 +537,7 @@ def nsga2_jax(
         mutation_p=mutation_p,
         hv_ref=hv_ref,
         rank_impl=rank_impl,
+        ctx=ctx,
     )
     return runner.run(
         seed=seed,

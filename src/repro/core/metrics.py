@@ -25,19 +25,22 @@ __all__ = ["BEHAV_METRICS", "behav_metrics"]
 
 def behav_metrics(
     spec: OperatorSpec, configs: np.ndarray, batch_size: int = 256,
-    backend: str = "numpy",
+    backend="numpy",
 ) -> dict[str, np.ndarray]:
     """Exhaustive BEHAV metrics for a batch of configs.
 
-    Returns a dict of float64 arrays of shape (D,).  ``backend="jax"`` runs the
-    accelerator fast path (see module docstring); ``"numpy"`` is the oracle.
+    Returns a dict of float64 arrays of shape (D,).  ``backend`` is a legacy
+    string (``"jax"`` runs the accelerator fast path, ``"numpy"`` the oracle)
+    or an :class:`repro.core.engine.ExecutionContext`, which additionally
+    selects the kernel impl and the config-axis device sharding.
     """
-    if backend == "jax":
+    from .engine import as_context
+
+    ctx = as_context(backend)
+    if ctx.is_jax:
         from .fastchar import behav_metrics_jax  # lazy: keeps numpy path JAX-free
 
-        return behav_metrics_jax(spec, configs, batch_size=batch_size)
-    if backend != "numpy":
-        raise ValueError(f"unknown backend {backend!r}")
+        return behav_metrics_jax(spec, configs, batch_size=batch_size, ctx=ctx)
     configs = np.atleast_2d(np.asarray(configs))
     d = configs.shape[0]
     exact = exact_product_table(spec.n_bits).astype(np.int64)

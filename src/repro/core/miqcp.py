@@ -27,6 +27,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .engine import as_context
 from .regression import PolyRegModel
 
 __all__ = [
@@ -37,6 +38,7 @@ __all__ = [
     "solve_enumerate",
     "solve_bnb",
     "solve_tabu",
+    "solve_tabu_multi",
     "solve_pool",
 ]
 
@@ -189,20 +191,22 @@ def _all_configs(L: int) -> np.ndarray:
 
 
 def solve_enumerate(
-    problem: MapProblem, pool_size: int = 16, backend: str = "numpy"
+    problem: MapProblem, pool_size: int = 16, backend="numpy"
 ) -> SolveResult:
     """Exact vectorized enumeration; only for L <= 22.
 
-    ``backend="jax"`` scores all 2^L configs (objective + both constraint
-    expressions) in one jit-compiled device dispatch
+    ``backend`` is a legacy string or an ``ExecutionContext``; under the jax
+    backend all 2^L configs (objective + both constraint expressions) are
+    scored in one jit-compiled device dispatch
     (``fastchar.map_problem_values_jax``); selection stays on the host.  Values
     are float32 on that path, so near-ties may order differently than numpy.
     """
+    use_jax = as_context(backend).is_jax
     L = problem.n
     if L > 22:
         raise ValueError(f"enumeration infeasible for L={L}")
     cfgs = _all_configs(L)
-    if backend == "jax":
+    if use_jax:
         from .fastchar import map_problem_values_jax  # lazy JAX import
 
         objs, vb, vp = map_problem_values_jax(problem, cfgs)
@@ -213,9 +217,9 @@ def solve_enumerate(
     if not feas.any():
         return SolveResult(None, np.inf, np.empty((0, L), dtype=np.uint8), "enum")
     objs = np.where(feas, objs, np.inf)
-    order = np.argsort(objs)[: 2 * pool_size if backend == "jax" else pool_size]
+    order = np.argsort(objs)[: 2 * pool_size if use_jax else pool_size]
     order = order[np.isfinite(objs[order])]
-    if backend == "jax":
+    if use_jax:
         # f32 scoring can misclassify configs within ~1e-6 of a bound; the pool
         # contract is float64 feasibility, so re-validate the few selected and
         # report the float64 objective of the winner.
@@ -335,6 +339,109 @@ def _solve_tabu_jax(
     return _tabu_pool_result(pool, best, best_obj, pool_size, L)
 
 
+def solve_tabu_multi(
+    problems: list[MapProblem],
+    seeds,
+    n_starts: int = 8,
+    n_iters: int = 400,
+    tabu_tenure: int = 7,
+    pool_size: int = 16,
+) -> list[SolveResult]:
+    """Cross-problem lockstep tabu: one device dispatch per iteration scores
+    EVERY problem's every start's full single-flip neighborhood.
+
+    ``_solve_tabu_jax`` already locksteps the starts of one problem; a MaP
+    battery (wt_B x n_quad x const_sf) still re-entered it once per problem,
+    paying one small dispatch per (problem, iteration).  Here the whole
+    battery advances as a single (problems x starts, L) batch through the
+    vmapped scorer ``fastchar.tabu_neighbor_values_multi_jax``.  Problems are
+    fully independent (per-problem penalties, aspiration thresholds, pools),
+    so each problem's trajectory matches ``_solve_tabu_jax`` run alone, modulo
+    f32 summation order inside the batched einsum.  ``seeds`` gives each
+    problem its own start battery, matching ``solve_pool``'s ``seed + k``.
+    """
+    from .fastchar import tabu_neighbor_values_multi_jax  # lazy JAX import
+
+    if not problems:
+        return []
+    L = problems[0].n
+    if any(p.n != L for p in problems):
+        raise ValueError("solve_tabu_multi requires a same-L problem battery")
+    seeds = list(seeds)
+    if len(seeds) != len(problems):
+        raise ValueError(f"{len(problems)} problems but {len(seeds)} seeds")
+    P = len(problems)
+    states = np.stack(
+        [np.stack(_tabu_starts(pb, n_starts, sd)) for pb, sd in zip(problems, seeds)]
+    )  # (P, S, L)
+    S = states.shape[1]
+    step = tabu_neighbor_values_multi_jax(problems)
+    max_b = np.array([pb.max_behav for pb in problems])[:, None, None]
+    max_p = np.array([pb.max_ppa for pb in problems])[:, None, None]
+    den_b = np.maximum(np.abs(max_b), 1e-9)
+    den_p = np.maximum(np.abs(max_p), 1e-9)
+
+    rho = np.ones((P, S))
+    tabu = np.zeros((P, S, L), dtype=np.int64)
+    active = np.ones((P, S), dtype=bool)
+    cur_pen = np.stack(
+        [pb.obj.value(states[p]) + rho[p] * pb.violation(states[p])
+         for p, pb in enumerate(problems)]
+    )
+    pools: list[list[tuple[float, bytes]]] = [[] for _ in range(P)]
+    bests: list[np.ndarray | None] = [None] * P
+    best_obj = np.full(P, np.inf)
+
+    for it in range(n_iters):
+        if not active.any():
+            break
+        vals, deltas = step(states)                       # (P, 3, S), (P, 3, S, L)
+        obj_v, vb, vp = vals[:, 0], vals[:, 1], vals[:, 2]
+        d_obj, d_b, d_p = deltas[:, 0], deltas[:, 1], deltas[:, 2]
+        nb = np.maximum(0.0, vb[:, :, None] + d_b - max_b) / den_b
+        np_ = np.maximum(0.0, vp[:, :, None] + d_p - max_p) / den_p
+        cand_pen = obj_v[:, :, None] + d_obj + rho[:, :, None] * (nb + np_)
+        blocked = tabu > it
+        asp = (cand_pen < best_obj[:, None, None]) & (nb + np_ <= 0)
+        score = np.where(blocked & ~asp, np.inf, cand_pen)
+        k = np.argmin(score, axis=2)                      # (P, S)
+        k_score = np.take_along_axis(score, k[:, :, None], axis=2)[:, :, 0]
+        active &= np.isfinite(k_score)
+        pi, si = np.nonzero(active)
+        if pi.size == 0:
+            break
+        move_gain = cur_pen - k_score
+        states[pi, si, k[pi, si]] = 1.0 - states[pi, si, k[pi, si]]
+        tabu[pi, si, k[pi, si]] = it + tabu_tenure
+        cur_pen = np.where(active, k_score, cur_pen)
+
+        # float64 bookkeeping of the moved states (feasibility, pool, best),
+        # per problem in start order -- identical to the single-problem path
+        for p in range(P):
+            rows = si[pi == p]
+            if rows.size == 0:
+                continue
+            pb = problems[p]
+            viol_new = pb.violation(states[p, rows])
+            obj_new = pb.obj.value(states[p, rows])
+            for ri, v, o in zip(rows, viol_new, obj_new):
+                if v <= 0:
+                    key = states[p, ri].astype(np.uint8).tobytes()
+                    pools[p].append((float(o), key))
+                    if o < best_obj[p]:
+                        best_obj[p] = float(o)
+                        bests[p] = states[p, ri].astype(np.uint8).copy()
+                else:
+                    rho[p, ri] *= 1.05
+        brk = (move_gain[pi, si] <= 1e-12) & (it > 20) & (rho[pi, si] > 100)
+        active[pi[brk], si[brk]] = False
+
+    return [
+        _tabu_pool_result(pools[p], bests[p], best_obj[p], pool_size, L)
+        for p in range(P)
+    ]
+
+
 def solve_tabu(
     problem: MapProblem,
     n_starts: int = 8,
@@ -342,20 +449,19 @@ def solve_tabu(
     tabu_tenure: int = 7,
     pool_size: int = 16,
     seed: int = 0,
-    backend: str = "numpy",
+    backend="numpy",
 ) -> SolveResult:
     """Multi-start steepest-descent tabu search with adaptive constraint penalty.
 
-    ``backend="jax"`` advances all starts in lockstep, scoring every start's
-    single-flip neighborhood as one batched device dispatch per iteration (see
+    ``backend`` is a legacy string or an ``ExecutionContext``; the jax backend
+    advances all starts in lockstep, scoring every start's single-flip
+    neighborhood as one batched device dispatch per iteration (see
     ``_solve_tabu_jax``); ``"numpy"`` is the serial per-start oracle.
     """
-    if backend == "jax":
+    if as_context(backend).is_jax:
         return _solve_tabu_jax(
             problem, n_starts, n_iters, tabu_tenure, pool_size, seed
         )
-    if backend != "numpy":
-        raise ValueError(f"unknown solve_tabu backend {backend!r}")
     L = problem.n
     pool: list[tuple[float, bytes]] = []
     best, best_obj = None, np.inf
@@ -470,7 +576,7 @@ def solve_bnb(
 
 
 def solve(
-    problem: MapProblem, seed: int = 0, pool_size: int = 16, backend: str = "numpy"
+    problem: MapProblem, seed: int = 0, pool_size: int = 16, backend="numpy"
 ) -> SolveResult:
     """Dispatch: exact enumeration when tractable, tabu otherwise."""
     if problem.n <= 16:
@@ -482,14 +588,33 @@ def solve_pool(
     problems: list[MapProblem],
     seed: int = 0,
     pool_size: int = 8,
-    backend: str = "numpy",
+    backend="numpy",
 ) -> np.ndarray:
-    """Union of solution pools over a problem list (dedup) -- the MaP config pool."""
-    configs = []
-    for k, prob in enumerate(problems):
-        res = solve(prob, seed=seed + k, pool_size=pool_size, backend=backend)
-        if len(res.pool):
-            configs.append(res.pool)
+    """Union of solution pools over a problem list (dedup) -- the MaP config pool.
+
+    Under a jax ``backend``/context on tabu-sized instances (L > 16) the whole
+    battery is solved by :func:`solve_tabu_multi`: one lockstep
+    (problems x starts, L) batch, one neighborhood dispatch per iteration for
+    ALL problems, instead of re-entering the solver once per problem.
+    """
+    ctx = as_context(backend)
+    same_l_tabu = (
+        bool(problems)
+        and problems[0].n > 16
+        and all(p.n == problems[0].n for p in problems)
+    )
+    if ctx.is_jax and same_l_tabu:
+        results = solve_tabu_multi(
+            problems,
+            seeds=[seed + k for k in range(len(problems))],
+            pool_size=pool_size,
+        )
+    else:
+        results = [
+            solve(prob, seed=seed + k, pool_size=pool_size, backend=ctx)
+            for k, prob in enumerate(problems)
+        ]
+    configs = [res.pool for res in results if len(res.pool)]
     if not configs:
         return np.empty((0, problems[0].n if problems else 0), dtype=np.uint8)
     allc = np.concatenate(configs)

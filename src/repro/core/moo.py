@@ -139,7 +139,7 @@ def nsga2(
     crossover_p: float = 0.9,
     mutation_p: float | None = None,
     eval_viol_fn: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]] | None = None,
-    backend: str = "numpy",
+    backend="numpy",
     objs_device_fn: Callable | None = None,
     max_behav: float | None = None,
     max_ppa: float | None = None,
@@ -152,8 +152,11 @@ def nsga2(
     generation in one device dispatch.  When given it replaces both ``eval_fn``
     and ``violation_fn``.
 
-    ``backend="jax"`` runs the *whole* GA -- operators, sorting, environmental
-    selection, archive hypervolume -- as one compiled device program
+    ``backend`` is a legacy string or an ``ExecutionContext`` (whose
+    ``resolved_ga_backend`` decides the engine and whose PRNG policy / rank
+    kernel preference carry into it).  ``"jax"`` runs the *whole* GA --
+    operators, sorting, environmental selection, archive hypervolume -- as
+    one compiled device program
     (``repro.core.fastmoo``).  It requires ``objs_device_fn``, a pure jnp
     ``(B, L) -> (B, 2)`` objective closure (e.g.
     ``fastchar.surrogate_objs_device`` or the ``.objs_fn`` attribute of
@@ -162,7 +165,10 @@ def nsga2(
     DSE layer).  RNG streams differ from numpy's, so results match the numpy
     oracle in hypervolume, not bit-for-bit.
     """
-    if backend == "jax":
+    from .engine import ExecutionContext, as_context
+
+    ctx = as_context(backend)
+    if ctx.resolved_ga_backend == "jax":
         from .fastmoo import UNBOUNDED, nsga2_jax  # lazy JAX import
 
         if objs_device_fn is None:
@@ -184,9 +190,8 @@ def nsga2(
             mutation_p=mutation_p,
             max_behav=UNBOUNDED if max_behav is None else max_behav,
             max_ppa=UNBOUNDED if max_ppa is None else max_ppa,
+            ctx=backend if isinstance(backend, ExecutionContext) else None,
         )
-    if backend != "numpy":
-        raise ValueError(f"unknown nsga2 backend {backend!r}")
     rng = np.random.default_rng(seed)
     mutation_p = mutation_p if mutation_p is not None else 1.0 / n_bits
     if eval_fn is None and eval_viol_fn is None:

@@ -1,0 +1,223 @@
+"""ExecutionContext: the unified execution policy and its back-compat shims.
+
+The legacy ``backend=``/``ga_backend=`` strings must keep working everywhere
+and resolve to the equivalent ``ExecutionContext``; bad backend / mesh / axis
+combinations must fail eagerly at construction, not deep inside an engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dse import DSESettings
+from repro.core.engine import (
+    MESH_AXIS,
+    ExecutionContext,
+    as_context,
+)
+
+
+# ---------------------------------------------------------------------------
+# Construction + eager validation
+# ---------------------------------------------------------------------------
+
+
+def test_default_context_is_numpy_unsharded():
+    ctx = ExecutionContext()
+    assert ctx.backend == "numpy"
+    assert not ctx.is_jax
+    assert ctx.resolved_ga_backend == "numpy"
+    assert ctx.device_count == 1
+    assert not ctx.shards("configs") and not ctx.shards("lanes")
+
+
+def test_ga_backend_follows_backend_unless_overridden():
+    assert ExecutionContext(backend="jax").resolved_ga_backend == "jax"
+    assert (
+        ExecutionContext(backend="jax", ga_backend="numpy").resolved_ga_backend
+        == "numpy"
+    )
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(backend="torch"),
+        dict(ga_backend="torch"),
+        dict(kernel_impl="cuda"),
+        dict(prng_impl="mersenne"),
+        dict(backend="jax", shard_axes=("configs", "configs"), n_devices=1),
+        dict(backend="jax", shard_axes=("rows",)),
+        dict(backend="jax", n_devices=0),
+        dict(backend="jax", n_devices=-2),
+    ],
+)
+def test_bad_policy_fails_eagerly(kwargs):
+    with pytest.raises(ValueError):
+        ExecutionContext(**kwargs)
+
+
+def test_sharding_requires_jax_backend():
+    with pytest.raises(ValueError, match="requires backend='jax'"):
+        ExecutionContext(backend="numpy", n_devices=4)
+
+
+def test_mesh_with_no_shard_axes_is_rejected():
+    with pytest.raises(ValueError, match="nothing to shard"):
+        ExecutionContext(backend="jax", n_devices=2, shard_axes=())
+
+
+def test_too_many_devices_fails_at_construction():
+    import jax
+
+    too_many = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="devices"):
+        ExecutionContext(backend="jax", n_devices=too_many)
+
+
+def test_shards_only_named_axes():
+    ctx = ExecutionContext(backend="jax", shard_axes=("lanes",), n_devices=1)
+    assert not ctx.shards("configs")
+    with pytest.raises(ValueError):
+        ctx.shards("batteries")
+
+
+def test_kernel_impl_resolves_per_engine_menu():
+    ctx = ExecutionContext(backend="jax", kernel_impl="gemm")
+    # fastapp's menu includes gemm; fastchar's does not -> engine default
+    assert ctx.resolve_impl(("gemm", "xla", "pallas")) == "gemm"
+    assert ctx.resolve_impl(("xla", "pallas")) is None
+    assert ctx.resolve_impl(("xla", "pallas"), "xla") == "xla"
+
+
+def test_mesh_axis_name_and_single_device_mesh():
+    ctx = ExecutionContext(backend="jax", n_devices=1)
+    assert ctx.mesh().axis_names == (MESH_AXIS,)
+    assert len(ctx.devices()) == 1
+
+
+def test_prng_policy_key_kinds():
+    import jax
+
+    ctx = ExecutionContext(backend="jax")
+    np.testing.assert_array_equal(
+        np.asarray(ctx.prng_key(7)), np.asarray(jax.random.PRNGKey(7))
+    )
+    k = ExecutionContext(backend="jax", prng_impl="rbg").prng_key(7)
+    assert jax.dtypes.issubdtype(k.dtype, jax.dtypes.prng_key)
+
+
+# ---------------------------------------------------------------------------
+# The as_context shim
+# ---------------------------------------------------------------------------
+
+
+def test_as_context_normalizes_legacy_strings():
+    ctx = as_context("jax")
+    assert isinstance(ctx, ExecutionContext) and ctx.backend == "jax"
+    assert as_context("numpy", ga_backend="jax").resolved_ga_backend == "jax"
+    assert as_context(None).backend == "numpy"
+
+
+def test_as_context_passes_contexts_through():
+    ctx = ExecutionContext(backend="jax")
+    assert as_context(ctx) is ctx
+    default = ExecutionContext(backend="jax", ga_backend="numpy")
+    assert as_context(None, default=default) is default
+
+
+def test_as_context_rejects_conflicting_ga_backend():
+    ctx = ExecutionContext(backend="jax", ga_backend="numpy")
+    with pytest.raises(ValueError, match="conflicting"):
+        as_context(ctx, ga_backend="jax")
+
+
+def test_as_context_rejects_bad_strings():
+    with pytest.raises(ValueError, match="backend must be 'numpy' or 'jax'"):
+        as_context("torch")
+
+
+# ---------------------------------------------------------------------------
+# DSESettings integration (eager validation + mirroring)
+# ---------------------------------------------------------------------------
+
+
+def test_dse_settings_strings_build_equivalent_context():
+    st = DSESettings(backend="jax", ga_backend="numpy")
+    assert isinstance(st.context, ExecutionContext)
+    assert st.context.backend == "jax"
+    assert st.context.ga_backend == "numpy"
+    assert st.resolved_ga_backend == "numpy"
+
+
+def test_dse_settings_context_mirrors_legacy_fields():
+    ctx = ExecutionContext(backend="jax")
+    st = DSESettings(context=ctx)
+    assert st.backend == "jax" and st.ga_backend is None
+    assert st.context is ctx
+
+
+def test_dse_settings_conflicting_policy_is_rejected():
+    ctx = ExecutionContext(backend="numpy")
+    with pytest.raises(ValueError, match="conflicting"):
+        DSESettings(backend="jax", context=ctx)
+    # an explicit numpy string against a jax context is just as conflicting
+    with pytest.raises(ValueError, match="conflicting"):
+        DSESettings(backend="numpy", context=ExecutionContext(backend="jax"))
+    with pytest.raises(ValueError, match="conflicting"):
+        DSESettings(
+            ga_backend="numpy",
+            context=ExecutionContext(backend="jax", ga_backend="jax"),
+        )
+    with pytest.raises(TypeError):
+        DSESettings(context="jax")
+
+
+def test_dse_settings_matching_strings_alongside_context_are_accepted():
+    ctx = ExecutionContext(backend="jax")
+    # ga_backend='jax' agrees with the context's *resolved* GA backend
+    st = DSESettings(backend="jax", ga_backend="jax", context=ctx)
+    assert st.context is ctx and st.resolved_ga_backend == "jax"
+
+
+@pytest.mark.parametrize("bad", ["torch", "", "JAX"])
+def test_dse_settings_bad_backend_strings_fail_eagerly(bad):
+    with pytest.raises(ValueError, match="backend must be 'numpy' or 'jax'"):
+        DSESettings(backend=bad)
+
+
+def test_dse_settings_bad_mesh_fails_eagerly():
+    import jax
+
+    too_many = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="devices"):
+        DSESettings(
+            context=ExecutionContext(backend="jax", n_devices=too_many)
+        )
+
+
+def test_dse_settings_replace_keeps_context():
+    import dataclasses
+
+    st = DSESettings(backend="jax")
+    st2 = dataclasses.replace(st, const_sf=0.5)
+    assert st2.context.backend == "jax"
+    assert st2.const_sf == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Shim acceptance across the stack (strings land on the same context logic)
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_and_solver_shims_accept_strings_and_contexts():
+    from repro.core.metrics import behav_metrics
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(4)
+    cfgs = np.ones((2, spec.n_luts), dtype=np.uint8)
+    ref = behav_metrics(spec, cfgs, backend="numpy")
+    via_ctx = behav_metrics(spec, cfgs, backend=ExecutionContext())
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], via_ctx[k])
+    with pytest.raises(ValueError, match="backend must be 'numpy' or 'jax'"):
+        behav_metrics(spec, cfgs, backend="torch")

@@ -11,7 +11,9 @@ from repro.core.miqcp import (
     build_problems,
     solve_bnb,
     solve_enumerate,
+    solve_pool,
     solve_tabu,
+    solve_tabu_multi,
 )
 from repro.core.operator_model import spec_for
 from repro.core.regression import fit_poly
@@ -107,6 +109,98 @@ def test_tabu_unknown_backend_raises():
     prob = _problems(0, 1.0, [0.5])[0]
     with pytest.raises(ValueError):
         solve_tabu(prob, backend="torch")
+
+
+def test_tabu_multi_identical_best_on_4x4_battery():
+    """Cross-problem lockstep tabu == serial numpy per problem on a battery.
+
+    The whole battery advances as one (problems x starts, L) batch -- one
+    vmapped neighborhood dispatch per iteration for ALL problems
+    (``fastchar.tabu_neighbor_values_multi_jax``).  Problems are independent,
+    so each problem's best config/objective must match the serial numpy
+    oracle's exactly on the 4x4 battery (2 n_quad x 2 const_sf x 2 wt_B = 8
+    problems); deep pool tails can differ on near-ties like the
+    single-problem jax path, but every pool must stay feasible/unique and
+    contain its best.
+    """
+    problems = []
+    for n_quad in (0, 4):
+        for const_sf in (0.5, 1.0):
+            problems.extend(_problems(n_quad, const_sf, [0.25, 0.75]))
+    seeds = list(range(len(problems)))
+    multi = solve_tabu_multi(problems, seeds=seeds)
+    assert len(multi) == len(problems)
+    for prob, sd, res in zip(problems, seeds, multi):
+        serial = solve_tabu(prob, seed=sd)  # the numpy oracle
+        assert (serial.best is None) == (res.best is None)
+        if serial.best is None:
+            continue
+        np.testing.assert_array_equal(serial.best, res.best)
+        scale = abs(serial.best_obj) + 1e-3
+        assert abs(res.best_obj - serial.best_obj) <= 1e-6 * scale
+        assert prob.feasible(res.pool).all()
+        assert len(np.unique(res.pool, axis=0)) == len(res.pool)
+        assert (res.pool == res.best).all(axis=1).any()
+
+
+def test_tabu_multi_battery_matches_single_problem_lockstep():
+    """One-problem battery == the single-problem jax lockstep path exactly."""
+    for prob in _problems(4, 1.0, [0.5]):
+        single = solve_tabu(prob, seed=3, backend="jax")
+        (multi,) = solve_tabu_multi([prob], seeds=[3])
+        assert (single.best is None) == (multi.best is None)
+        if single.best is None:
+            continue
+        np.testing.assert_array_equal(single.best, multi.best)
+        np.testing.assert_array_equal(single.pool, multi.pool)
+
+
+def _linear_problem(L: int, seed: int, max_behav: float = 2.0) -> MapProblem:
+    """A random linear MaP instance at arbitrary L (tabu-sized when L > 22)."""
+    rng = np.random.default_rng(seed)
+    lin_b = rng.standard_normal(L)
+    lin_p = rng.standard_normal(L)
+    return MapProblem(
+        obj=QuadExpr(0.0, 0.5 * lin_b + 0.5 * lin_p, np.zeros((L, L))),
+        behav=QuadExpr(0.0, lin_b, np.zeros((L, L))),
+        ppa=QuadExpr(0.0, lin_p, np.zeros((L, L))),
+        max_behav=max_behav, max_ppa=2.0, wt_b=0.5, const_sf=1.0, n_quad=0,
+    )
+
+
+def test_solve_pool_jax_batches_tabu_batteries():
+    """solve_pool under a jax context routes L>16 batteries through the
+    lockstep multi solver and unions the same per-problem pools."""
+    L = 24  # tabu-sized (enumeration refuses L > 22, solve() cuts at 16)
+    problems = [_linear_problem(L, seed=k) for k in range(3)]
+    pool_jax = solve_pool(problems, seed=0, pool_size=4, backend="jax")
+    expected = solve_tabu_multi(
+        problems, seeds=[0, 1, 2], pool_size=4
+    )
+    manual = np.concatenate([r.pool for r in expected if len(r.pool)])
+    _, idx = np.unique(manual, axis=0, return_index=True)
+    np.testing.assert_array_equal(pool_jax, manual[np.sort(idx)])
+
+
+def test_tabu_multi_rejects_mixed_sizes():
+    with pytest.raises(ValueError, match="same-L"):
+        solve_tabu_multi(
+            [_linear_problem(24, seed=0), _problems(0, 1.0, [0.5])[0]],
+            seeds=[0, 1],
+        )
+
+
+def test_solve_pool_jax_mixed_sizes_falls_back_per_problem():
+    """A mixed-L battery cannot lockstep; solve_pool must keep the pre-multi
+    per-problem dispatch (exact enumeration for the small instance) instead of
+    erroring inside solve_tabu_multi.  The big lane is made infeasible so the
+    union concat only sees the small problem's pool, as before this PR."""
+    big = _linear_problem(24, seed=0, max_behav=-1e9)  # no feasible point
+    small = _problems(0, 1.0, [0.5])[0]
+    pool = solve_pool([big, small], seed=0, pool_size=4, backend="jax")
+    ref = solve_pool([big, small], seed=0, pool_size=4, backend="numpy")
+    assert pool.shape[1] == small.n
+    assert len(pool) and len(ref)
 
 
 def test_tight_constraints_reduce_feasible_pool():

@@ -1,0 +1,197 @@
+"""Multi-device sharded execution parity (ExecutionContext meshes).
+
+Every sharded batch axis in the stack carries fully independent entries
+(per-config characterization/scoring, per-lane GA runs), so sharded dispatch
+must be **bit-identical** to the unsharded jax path.  These tests need forced
+host devices to exercise real meshes on CPU:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_sharding.py
+
+and skip cleanly in a single-device process (JAX device count is fixed at
+first init, so the flag cannot be set from inside the test session).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import DSESettings, run_dse_sweep
+from repro.core.engine import ExecutionContext
+from repro.core.dataset import build_training_dataset
+from repro.core.fastchar import behav_metrics_jax
+from repro.core.fastmoo import UNBOUNDED, CompiledNSGA2
+from repro.core.metrics import behav_metrics
+from repro.core.moo import nsga2
+from repro.core.operator_model import spec_for
+from repro.apps import APPLICATIONS
+from repro.apps.fastapp import multi_app_behav_jax
+
+N_DEV = len(jax.devices())
+MESH_SIZES = [n for n in (2, 4, 8) if n <= N_DEV]
+
+pytestmark = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 JAX devices: run with "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _ctx(n, **kw):
+    return ExecutionContext(backend="jax", n_devices=n, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Sharded characterization (fastchar D axis)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedCharacterization:
+    @pytest.fixture(scope="class")
+    def batch(self):
+        spec = spec_for(8)
+        rng = np.random.default_rng(0)
+        cfgs = rng.integers(0, 2, (64, spec.n_luts)).astype(np.uint8)
+        return spec, cfgs, behav_metrics_jax(spec, cfgs, impl="xla")
+
+    @pytest.mark.parametrize("n_dev", MESH_SIZES)
+    def test_sharded_behav_partials_bit_identical(self, batch, n_dev):
+        spec, cfgs, base = batch
+        sharded = behav_metrics_jax(spec, cfgs, ctx=_ctx(n_dev))
+        for k in base:
+            np.testing.assert_array_equal(base[k], sharded[k], err_msg=k)
+
+    def test_odd_batch_pads_onto_the_mesh(self, batch):
+        spec, cfgs, base = batch
+        sharded = behav_metrics(spec, cfgs[:37], backend=_ctx(N_DEV))
+        for k in base:
+            np.testing.assert_array_equal(base[k][:37], sharded[k], err_msg=k)
+
+    def test_sharded_pallas_interpret_matches_unsharded(self, batch):
+        spec, cfgs, _ = batch
+        ctx = _ctx(MESH_SIZES[0], kernel_impl="pallas")
+        base = behav_metrics_jax(spec, cfgs[:16], impl="pallas")
+        sharded = behav_metrics_jax(spec, cfgs[:16], ctx=ctx)
+        for k in base:
+            np.testing.assert_array_equal(base[k], sharded[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Sharded application BEHAV (fastapp D axis)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedAppBehav:
+    @pytest.fixture(scope="class")
+    def batch(self):
+        spec = spec_for(8)
+        rng = np.random.default_rng(1)
+        cfgs = rng.integers(0, 2, (16, spec.n_luts)).astype(np.uint8)
+        apps = [APPLICATIONS[n]() for n in sorted(APPLICATIONS)]
+        return spec, cfgs, apps, multi_app_behav_jax(apps, spec, cfgs)
+
+    @pytest.mark.parametrize("n_dev", MESH_SIZES)
+    def test_all_apps_sharded_bit_identical(self, batch, n_dev):
+        spec, cfgs, apps, base = batch
+        sharded = multi_app_behav_jax(apps, spec, cfgs, ctx=_ctx(n_dev))
+        for name in base:
+            np.testing.assert_array_equal(base[name], sharded[name], err_msg=name)
+
+    def test_gather_impl_sharded_bit_identical(self, batch):
+        spec, cfgs, apps, base = batch
+        ctx = _ctx(MESH_SIZES[-1], kernel_impl="xla")
+        sharded = multi_app_behav_jax(apps, spec, cfgs, ctx=ctx)
+        for name in base:
+            np.testing.assert_array_equal(base[name], sharded[name], err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Lane-sharded GA sweeps (fastmoo lane axis)
+# ---------------------------------------------------------------------------
+
+
+def _toy_objs(X):
+    return jnp.stack([X.sum(-1), (1.0 - X).sum(-1)], axis=-1)
+
+
+class TestLaneShardedSweep:
+    L = 20
+    REF = np.array([24.0, 24.0])
+
+    def _runner(self, ctx=None):
+        return CompiledNSGA2(
+            _toy_objs, n_bits=self.L, pop_size=16, n_gen=8, hv_ref=self.REF,
+            ctx=ctx,
+        )
+
+    def test_lane_sharded_sweep_bit_identical(self):
+        seeds = list(range(2 * N_DEV))
+        bounds = [(UNBOUNDED, UNBOUNDED)] * len(seeds)
+        base = self._runner().run_sweep(seeds, bounds)
+        sharded = self._runner(_ctx(N_DEV)).run_sweep(seeds, bounds)
+        for a, b in zip(base, sharded):
+            np.testing.assert_array_equal(a.population, b.population)
+            np.testing.assert_array_equal(a.archive_configs, b.archive_configs)
+            np.testing.assert_array_equal(a.archive_objs, b.archive_objs)
+            np.testing.assert_array_equal(a.archive_viol, b.archive_viol)
+            assert a.hv_history == b.hv_history
+
+    def test_ragged_lane_count_pads_and_drops(self):
+        seeds = list(range(N_DEV + 1))  # not divisible by the mesh
+        bounds = [(UNBOUNDED, UNBOUNDED)] * len(seeds)
+        base = self._runner().run_sweep(seeds, bounds)
+        sharded = self._runner(_ctx(N_DEV)).run_sweep(seeds, bounds)
+        assert len(sharded) == len(seeds)
+        for a, b in zip(base, sharded):
+            np.testing.assert_array_equal(a.archive_configs, b.archive_configs)
+
+    def test_hv_parity_vs_numpy_oracle(self):
+        """Sharded device GA vs host oracle GA: hypervolume parity (RNG differs)."""
+
+        def eval_np(X):
+            X = np.asarray(X, np.float64)
+            return np.stack([X.sum(-1), (1.0 - X).sum(-1)], axis=-1)
+
+        oracle = nsga2(
+            eval_np, n_bits=self.L, pop_size=48, n_gen=40, seed=0,
+            hv_ref=self.REF,
+        )
+        ga = CompiledNSGA2(
+            _toy_objs, n_bits=self.L, pop_size=48, n_gen=40, hv_ref=self.REF,
+            ctx=_ctx(N_DEV),
+        ).run_sweep([0], [(UNBOUNDED, UNBOUNDED)])[0]
+        hv_np = oracle.hv_history[-1][1]
+        hv_jx = ga.hv_history[-1][1]
+        assert hv_np > 0
+        assert abs(hv_jx - hv_np) <= 0.02 * hv_np
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: run_dse_sweep through a fully sharded context
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_run_dse_sweep_sharded_end_to_end_matches_unsharded():
+    spec = spec_for(4)
+    ds = build_training_dataset(spec, n_random=80, seed=0)
+    kw = dict(
+        pop_size=8, n_gen=3, n_quad_grid=(0,), pool_size=2, n_estimator_quad=4,
+    )
+    base = run_dse_sweep(
+        spec, ds, method="ga",
+        settings=DSESettings(context=ExecutionContext(backend="jax"), **kw),
+        seeds=(0, 1), const_sf_grid=(0.5, 1.0),
+    )
+    sharded = run_dse_sweep(
+        spec, ds, method="ga",
+        settings=DSESettings(context=_ctx(N_DEV), **kw),
+        seeds=(0, 1), const_sf_grid=(0.5, 1.0),
+    )
+    assert len(base) == len(sharded) == 4
+    for a, b in zip(base, sharded):
+        np.testing.assert_array_equal(a.vpf_configs, b.vpf_configs)
+        np.testing.assert_allclose(a.vpf_objs, b.vpf_objs)
+        np.testing.assert_allclose(a.hv_vpf, b.hv_vpf)

@@ -1,25 +1,65 @@
-"""Beyond-paper: Pallas kernel parity + interpret-mode call costs.
+"""Beyond-paper: Pallas kernel parity + interpret-mode call costs, plus the
+kernel-registry autotune comparison (default vs searched block shapes for the
+three DSE engine kernels).
 
 CPU interpret-mode wall times are NOT TPU performance; the derived column is
-the oracle parity (the roofline tables in EXPERIMENTS.md carry the perf story).
+the oracle parity (the roofline tables in EXPERIMENTS.md carry the perf
+story).  The autotune rows time the CPU-meaningful impls (the XLA twins; the
+dominance kernel's Pallas interpret timing is labelled as such) -- on TPU the
+same search runs against real Mosaic timings and fills the pending columns in
+EXPERIMENTS.md.
+
+Standalone (the CI ``kernel-tuning`` smoke step):
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels --quick
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operator_model import error_tables, spec_for
-from repro.kernels import axo_matmul, flash_attention, ssd_scan
+from repro.kernels import axo_matmul, flash_attention, ssd_scan, registry, tuning
 from repro.kernels.ref import (
     ref_axo_matmul_lowrank,
     ref_flash_attention,
     ref_ssd_scan,
 )
 
-from .common import BenchCtx, row, timed
+from .common import BenchCtx, emit, row, timed
 
 RNG = np.random.default_rng(0)
+
+
+def _autotune_rows(quick: bool) -> list[dict]:
+    """Default-tiles vs searched-tiles timings per engine kernel family."""
+    shapes = {
+        "fastchar.xla": dict(n_bits=8, d=64 if quick else 256),
+        "fastapp.xla": dict(n_bits=8, d=32 if quick else 64, m=64,
+                            k=64 if quick else 256, n=10),
+        "fastmoo.pallas": dict(p=64 if quick else 128, n_obj=2),
+    }
+    rows = []
+    for name, shape in shapes.items():
+        spec = registry.get(name)
+        bucket = spec.bucket(**shape)
+        rec = tuning.autotune(spec, bucket)
+        default = spec.default_tiles(bucket)
+        d_label = ",".join(f"{k}={v}" for k, v in default.items())
+        d_us = rec["timings"].get(d_label)
+        t_label = ",".join(f"{k}={v}" for k, v in rec["tiles"].items())
+        speedup = (d_us / rec["us"]) if d_us and rec["us"] else float("nan")
+        note = "interpret-mode" if name.endswith("pallas") else "xla"
+        rows.append(row(
+            f"kernels.autotune.{spec.engine}",
+            rec["us"] or 0.0,
+            f"tuned[{t_label}] vs default[{d_label}]={d_us}us "
+            f"speedup={speedup:.2f}x ({note}, {rec['candidates']} cands)",
+        ))
+    return rows
 
 
 def run(ctx: BenchCtx) -> list[dict]:
@@ -61,4 +101,26 @@ def run(ctx: BenchCtx) -> list[dict]:
     yr, hr = ref_ssd_scan(x, dt, av, bm, cm)
     errv = float(jnp.max(jnp.abs(y - yr)))
     rows.append(row("kernels.ssd_scan_512", us, f"abs_err={errv:.2e}"))
+
+    rows.extend(_autotune_rows(ctx.quick))
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", action="store_true",
+                      help="small autotune buckets (the default; the CI "
+                           "smoke setting)")
+    size.add_argument("--full", action="store_true",
+                      help="EXPERIMENTS.md-sized autotune buckets")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    emit(run(BenchCtx(quick=not args.full)))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

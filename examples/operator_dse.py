@@ -57,10 +57,24 @@ def main():
                     help="which batch axes ride the mesh: 'configs' "
                          "(characterization/app scoring), 'lanes' (sweep "
                          "lanes), or both (default)")
-    ap.add_argument("--kernel-impl", choices=("xla", "pallas", "gemm"),
+    ap.add_argument("--kernel-impl", choices=("xla", "pallas", "gemm", "list"),
                     default=None, help="preferred kernel impl where an engine "
-                                       "offers a menu (default: auto)")
+                                       "offers a menu (default: auto); 'list' "
+                                       "prints the registered impls per engine "
+                                       "and exits")
+    ap.add_argument("--tuning", choices=("off", "cached", "search"),
+                    default="off",
+                    help="kernel block-shape autotune policy: 'cached' reuses "
+                         "(or searches once and persists) per-device tile "
+                         "winners, 'search' ignores persisted winners and "
+                         "re-tunes once per bucket")
     args = ap.parse_args()
+
+    if args.kernel_impl == "list":
+        from repro.kernels import registry
+
+        print(registry.describe())
+        return
 
     ctx = ExecutionContext(
         backend=args.backend,
@@ -68,6 +82,7 @@ def main():
         n_devices=args.devices,
         shard_axes=SHARD_AXES if args.shard == "all" else (args.shard,),
         kernel_impl=args.kernel_impl,
+        tuning=args.tuning,
     )
     if ctx.device_count > 1:
         print(f"execution: {ctx.backend} on {ctx.device_count} devices, "

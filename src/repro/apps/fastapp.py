@@ -338,7 +338,8 @@ def _resolve_impl(impl: str | None, batch: TableBatch, k: int) -> str:
     if impl is None and batch.ctx is not None:
         # context preference is auto-with-preference, not a hard per-call ask:
         # it may still fall back when the named impl cannot run this batch
-        impl = batch.ctx.resolve_impl(MATMUL_IMPLS)
+        # (the menu itself comes from the kernel registry's fastapp specs)
+        impl = batch.ctx.resolve_impl("fastapp")
     impl = default_matmul_impl() if impl is None else impl
     if impl not in MATMUL_IMPLS:
         raise ValueError(f"unknown fastapp impl {impl!r}")
@@ -366,7 +367,21 @@ def _config_mesh_ctx(batch: TableBatch, d: int) -> ExecutionContext | None:
 
 # Cached jit(shard_map(primitive)) builders, keyed by (frozen) context plus
 # the closure's static parameters -- building a fresh shard_map per call would
-# retrace and recompile every dispatch.
+# retrace and recompile every dispatch.  Builders whose static parameter is a
+# *tunable* tile (the gather paths' d_chunk) key on (context, shape bucket)
+# instead and keep the tile in the value, so a re-tuned bucket replaces its
+# entry in place rather than leaving a stale compiled executable pinned.
+
+_SHARDED_TAKE_CACHE: dict = {}
+
+
+def _sharded_by_bucket(key, tiles, build):
+    hit = _SHARDED_TAKE_CACHE.get(key)
+    if hit is not None and hit[0] == tiles:
+        return hit[1]
+    fn = build()
+    _SHARDED_TAKE_CACHE[key] = (tiles, fn)
+    return fn
 
 
 @functools.lru_cache(maxsize=None)
@@ -379,24 +394,28 @@ def _sharded_matmul_gemm(ctx: ExecutionContext, n_bits: int):
     ))
 
 
-@functools.lru_cache(maxsize=None)
-def _sharded_matmul_take_shared(ctx: ExecutionContext, d_chunk: int):
+def _sharded_matmul_take_shared(ctx: ExecutionContext, d_chunk: int, bucket):
     from jax.sharding import PartitionSpec as P
 
-    return jax.jit(ctx.shard_call(
-        lambda t, a, b: _matmul_take_shared(t, a, b, d_chunk),
-        in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
-    ))
+    return _sharded_by_bucket(
+        ("take_shared", ctx, bucket), d_chunk,
+        lambda: jax.jit(ctx.shard_call(
+            lambda t, a, b: _matmul_take_shared(t, a, b, d_chunk),
+            in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+        )),
+    )
 
 
-@functools.lru_cache(maxsize=None)
-def _sharded_matmul_take_batched(ctx: ExecutionContext, d_chunk: int):
+def _sharded_matmul_take_batched(ctx: ExecutionContext, d_chunk: int, bucket):
     from jax.sharding import PartitionSpec as P
 
-    return jax.jit(ctx.shard_call(
-        lambda t, a, b: _matmul_take_batched(t, a, b, d_chunk),
-        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P()), out_specs=P(MESH_AXIS),
-    ))
+    return _sharded_by_bucket(
+        ("take_batched", ctx, bucket), d_chunk,
+        lambda: jax.jit(ctx.shard_call(
+            lambda t, a, b: _matmul_take_batched(t, a, b, d_chunk),
+            in_specs=(P(MESH_AXIS), P(MESH_AXIS), P()), out_specs=P(MESH_AXIS),
+        )),
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -432,8 +451,9 @@ def table_matmul_jax(
     tables,
     a_codes,
     b_codes,
-    d_chunk: int = 8,
+    d_chunk: int | None = None,
     impl: str | None = None,
+    k_tile: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Batched table matmul: (D, M, N) int32, every multiply a table lookup.
@@ -441,13 +461,19 @@ def table_matmul_jax(
     ``tables`` is a ``TableBatch`` (preferred: enables the pair-plane GEMM
     path) or a raw ``(D, 2^N, 2^N)`` array.  ``a_codes`` is ``(M, K)`` (shared
     across configs) or ``(D, M, K)`` (per-config, e.g. the re-quantized hidden
-    activations of the FFN app -- always the XLA gather path).
+    activations of the FFN app -- always the XLA gather path).  ``None``
+    block shapes (the gather path's ``d_chunk``, the Pallas path's
+    ``k_tile``) resolve through the kernel registry under the batch
+    context's ``tuning`` policy.
     """
+    from ..kernels.tuning import tiles_for
+
     batch = _as_batch(tables)
     a = jnp.asarray(a_codes, jnp.int32)
     b = jnp.asarray(b_codes, jnp.int32)
     d = len(batch)
-    impl = _resolve_impl(impl, batch, a.shape[-1])
+    m, k, n = a.shape[-2], a.shape[-1], b.shape[1]
+    impl = _resolve_impl(impl, batch, k)
     mesh_ctx = _config_mesh_ctx(batch, d)
 
     if a.ndim == 2 and impl == "gemm":
@@ -460,8 +486,10 @@ def table_matmul_jax(
         from ..kernels.ops import on_tpu
 
         interpret = (not on_tpu()) if interpret is None else interpret
-        k = a.shape[1]
-        k_tile = min(64, k)
+        if k_tile is None:
+            k_tile = tiles_for(batch.ctx, "fastapp.pallas",
+                               n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["k_tile"]
+        k_tile = min(k_tile, max(k, 1))
         pad = (-k) % k_tile
         if pad:  # zero codes index table[0, 0] == 0: padding adds nothing
             a = jnp.concatenate([a, jnp.zeros((a.shape[0], pad), jnp.int32)], axis=1)
@@ -470,12 +498,27 @@ def table_matmul_jax(
             batch.tables.reshape(d, -1), a, b, k_tile=k_tile, interpret=interpret
         )
 
+    if d_chunk is None:
+        d_chunk = tiles_for(batch.ctx, "fastapp.xla",
+                            n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["d_chunk"]
     if mesh_ctx is not None and impl == "xla":
+        from ..kernels import registry
+
         # per-shard chunking: shrink d_chunk so it divides the local slice
         dc = math.gcd(d // mesh_ctx.device_count, d_chunk)
+        # the full registry shape bucket (n_bits, d, m, k, n) + operand rank:
+        # distinct app heads (different m/k/n -> different tuned d_chunk) get
+        # distinct entries instead of thrashing one (n_bits, d) slot
+        bucket = registry.get("fastapp.xla").bucket(
+            n_bits=batch.n_bits, d=d, m=m, k=k, n=n
+        ) + (a.ndim,)
         if a.ndim == 3:
-            return _sharded_matmul_take_batched(mesh_ctx, dc)(batch.tables, a, b)
-        return _sharded_matmul_take_shared(mesh_ctx, dc)(batch.tables, a, b)
+            return _sharded_matmul_take_batched(mesh_ctx, dc, bucket)(
+                batch.tables, a, b
+            )
+        return _sharded_matmul_take_shared(mesh_ctx, dc, bucket)(
+            batch.tables, a, b
+        )
 
     d_chunk = min(d_chunk, d)
     tp = _pad_leading(batch.tables, d_chunk)
@@ -549,7 +592,7 @@ def _argmax_mismatch(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
 
 
 def mismatch_counts(
-    tables, x_codes, w_codes, labels, d_chunk: int = 8,
+    tables, x_codes, w_codes, labels, d_chunk: int | None = None,
     impl: str | None = None, interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Classification head: table-GEMV logits -> per-config mismatch counts.

@@ -8,6 +8,15 @@ metric distribution.  ``gen_pattern`` reproduces that scheme.
 ``characterize`` accepts ``backend="numpy"`` (bit-exact oracle, default) or
 ``"jax"`` (the batched ``repro.core.fastchar`` engine) for the BEHAV half of
 the characterization; PPA always uses the shared numpy synthesis tables.
+
+Config *generation* follows the execution context's PRNG policy end to end:
+``gen_random`` (and ``build_training_dataset``, which forwards its
+``backend`` context) keeps the legacy numpy ``default_rng`` stream under the
+default policy -- existing datasets and caches stay bit-identical -- and
+switches to device-side ``jax.random`` generation under a context with a
+named ``prng_impl`` (``"rbg"``/``"unsafe_rbg"``: the TPU-native generators,
+the ROADMAP follow-on), keyed by ``ExecutionContext.prng_key`` so the same
+typed-key family drives dataset sampling and the GA engine.
 """
 
 from __future__ import annotations
@@ -93,10 +102,25 @@ class Dataset:
             return Dataset(configs=z["configs"], metrics=metrics, source=z["source"])
 
 
-def gen_random(spec: OperatorSpec, n: int, seed: int = 0) -> np.ndarray:
-    """Uniform random configs (the paper's RANDOM set)."""
-    rng = np.random.default_rng(seed)
-    return rng.integers(0, 2, size=(n, spec.n_luts)).astype(np.uint8)
+def gen_random(spec: OperatorSpec, n: int, seed: int = 0, ctx=None) -> np.ndarray:
+    """Uniform random configs (the paper's RANDOM set).
+
+    ``ctx`` (an ``ExecutionContext`` or None) selects the generator: the
+    default PRNG policy (no context, numpy backend, or ``prng_impl=None``)
+    keeps the legacy numpy stream bit-identical to every earlier release;
+    a jax context with a *named* ``prng_impl`` samples on device under that
+    family (typed keys from ``ctx.prng_key``), so TPU-native rbg generation
+    flows from dataset sampling through the GA with one policy knob.
+    """
+    if ctx is None or not getattr(ctx, "is_jax", False) or ctx.prng_impl is None:
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, 2, size=(n, spec.n_luts)).astype(np.uint8)
+    import jax
+
+    bits = jax.random.randint(
+        ctx.prng_key(seed), (n, spec.n_luts), 0, 2, dtype="uint8"
+    )
+    return np.asarray(bits, dtype=np.uint8)
 
 
 def gen_pattern(spec: OperatorSpec) -> np.ndarray:
@@ -186,12 +210,21 @@ def build_training_dataset(
 ) -> Dataset:
     """RANDOM + PATTERN training dataset (cached to ``cache_path`` if given).
 
-    ``backend`` is forwarded to :func:`characterize` for the BEHAV half.
+    ``backend`` (a legacy string or an ``ExecutionContext``) is forwarded to
+    :func:`characterize` for the BEHAV half *and* to :func:`gen_random` for
+    the RANDOM half, so a context's ``prng_impl`` policy governs generation
+    end to end.  Under the default PRNG policy the generated configs are
+    bit-identical to every earlier release; when naming a device PRNG
+    family, point ``cache_path`` somewhere impl-specific -- the cache key
+    does not encode the generator.
     """
     if cache_path is not None and os.path.exists(cache_path):
         return Dataset.load(cache_path)
 
-    parts = [gen_random(spec, n_random, seed=seed)]
+    from .engine import as_context
+
+    ctx = as_context(backend)
+    parts = [gen_random(spec, n_random, seed=seed, ctx=ctx)]
     sources = [np.zeros(n_random, dtype=np.uint8)]
     if include_pattern:
         pat = gen_pattern(spec)

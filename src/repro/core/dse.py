@@ -63,8 +63,11 @@ class DSESettings:
     the equivalent context when ``context`` is not given (``"jax"`` routes VPF
     re-characterization through ``repro.core.fastchar``, batches the MaP
     solver scoring on device, and runs the GA on ``repro.core.fastmoo``;
-    ``ga_backend=None`` follows ``backend``).  Passing both a context and
-    conflicting strings is an eager error, as is any invalid mesh/axis combo
+    ``ga_backend=None`` follows ``backend``).  ``tuning`` is the kernel
+    block-shape autotune policy (``repro.kernels.tuning``): like the strings
+    it seeds the constructed context, and like them it must agree with an
+    explicitly-passed one.  Passing both a context and conflicting
+    strings/policies is an eager error, as is any invalid mesh/axis combo
     (unknown backend, sharding under numpy, more devices than exist).
     """
 
@@ -80,6 +83,7 @@ class DSESettings:
     n_estimator_quad: int = 48
     backend: str | None = None           # None = follow context (default numpy)
     ga_backend: str | None = None
+    tuning: str | None = None            # None = follow context (default "off")
     context: ExecutionContext | None = None
 
     def __post_init__(self) -> None:
@@ -89,24 +93,31 @@ class DSESettings:
             ctx = ExecutionContext(
                 backend=self.backend if self.backend is not None else "numpy",
                 ga_backend=self.ga_backend,
+                tuning=self.tuning if self.tuning is not None else "off",
             )
         else:
             if not isinstance(ctx, ExecutionContext):
                 raise TypeError(
                     f"context must be an ExecutionContext, got {type(ctx).__name__}"
                 )
-            if (self.backend is not None and self.backend != ctx.backend) or (
-                self.ga_backend is not None
-                and self.ga_backend != ctx.resolved_ga_backend
+            if (
+                (self.backend is not None and self.backend != ctx.backend)
+                or (
+                    self.ga_backend is not None
+                    and self.ga_backend != ctx.resolved_ga_backend
+                )
+                or (self.tuning is not None and self.tuning != ctx.tuning)
             ):
                 raise ValueError(
                     "conflicting execution policy: pass either context= or the "
-                    "legacy backend=/ga_backend= strings, not disagreeing both"
+                    "legacy backend=/ga_backend=/tuning= knobs, not "
+                    "disagreeing both"
                 )
         # mirror the context into the legacy string fields for old readers
         self.context = ctx
         self.backend = ctx.backend
         self.ga_backend = ctx.ga_backend
+        self.tuning = ctx.tuning
 
     @property
     def resolved_ga_backend(self) -> str:

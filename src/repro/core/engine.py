@@ -16,12 +16,21 @@ every engine:
     behav_partials`` and the fastapp table primitives; ``"lanes"``: the
     independent (seed x const_sf) axis of ``fastmoo.CompiledNSGA2.run_sweep``);
   * ``kernel_impl`` -- preferred kernel implementation where an engine offers a
-    menu (``fastchar``: xla/pallas; ``fastapp``: gemm/xla/pallas; ``fastmoo``
-    rank kernel: xla/pallas); engines fall back to their own default when the
-    named impl is not on their menu;
+    menu; the menus live in the kernel registry (``repro.kernels.registry``:
+    ``fastchar``: xla/pallas; ``fastapp``: gemm/xla/pallas; ``fastmoo`` rank
+    kernel: xla/pallas) and :meth:`ExecutionContext.resolve_impl` resolves a
+    preference against an engine's registered menu; engines fall back to
+    their own default when the named impl is not on their menu;
+  * ``tuning`` -- block-shape autotune policy for the registered kernels
+    (``"off"``: registry defaults; ``"cached"``: per-(shape bucket, device)
+    winners from the on-disk cache, searching once on a miss; ``"search"``:
+    ignore persisted winners and re-search once per process per bucket).
+    Consumed by ``repro.kernels.tuning.tiles_for``;
   * ``interpret`` -- Pallas interpret-mode override (None = auto off-TPU);
-  * ``prng_impl`` -- the JAX PRNG family used for GA keys (None = default
-    threefry2x32; ``"rbg"``/``"unsafe_rbg"`` for TPU-friendly generators).
+  * ``prng_impl`` -- the JAX PRNG family used for GA keys *and* for device-
+    side dataset generation (None = default threefry2x32 for keys and the
+    legacy numpy generator for datasets; ``"rbg"``/``"unsafe_rbg"`` for
+    TPU-friendly generators end to end).
 
 The legacy ``backend=``/``ga_backend=`` string parameters everywhere in the
 code base are **deprecated shims**: they still work, and they resolve to the
@@ -51,6 +60,7 @@ __all__ = [
     "KERNEL_IMPLS",
     "SHARD_AXES",
     "PRNG_IMPLS",
+    "TUNING_POLICIES",
     "MESH_AXIS",
     "ExecutionContext",
     "as_context",
@@ -60,6 +70,7 @@ BACKENDS = ("numpy", "jax")
 KERNEL_IMPLS = ("xla", "pallas", "gemm")
 SHARD_AXES = ("configs", "lanes")
 PRNG_IMPLS = ("threefry2x32", "rbg", "unsafe_rbg")
+TUNING_POLICIES = ("off", "cached", "search")
 MESH_AXIS = "shard"
 
 
@@ -90,6 +101,7 @@ class ExecutionContext:
     kernel_impl: str | None = None
     interpret: bool | None = None
     prng_impl: str | None = None
+    tuning: str = "off"
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -109,6 +121,10 @@ class ExecutionContext:
             raise ValueError(
                 f"prng_impl must be one of {(None,) + PRNG_IMPLS}, "
                 f"got {self.prng_impl!r}"
+            )
+        if self.tuning not in TUNING_POLICIES:
+            raise ValueError(
+                f"tuning must be one of {TUNING_POLICIES}, got {self.tuning!r}"
             )
         axes = self.shard_axes
         if isinstance(axes, str):
@@ -160,17 +176,32 @@ class ExecutionContext:
         return self.device_count > 1 and axis in self.shard_axes
 
     def resolve_impl(
-        self, choices: tuple[str, ...], default: str | None = None
+        self, choices: "str | tuple[str, ...]", default: str | None = None
     ) -> str | None:
         """The context's kernel impl if the engine offers it, else ``default``.
 
-        Engines have different impl menus (fastchar has no 'gemm'; fastapp
-        has no rank kernel), so a context-level preference only applies where
-        it names something the calling engine can actually run.
+        ``choices`` is an engine name (``"fastchar"``/``"fastapp"``/
+        ``"fastmoo"`` -- the menu is read from the kernel registry, the one
+        source of truth for what each engine can run) or, for backward
+        compatibility, an explicit tuple of impl names.  Engines have
+        different menus (fastchar has no 'gemm'; fastapp has no rank kernel),
+        so a context-level preference only applies where it names something
+        the calling engine can actually run.
         """
+        if isinstance(choices, str):
+            from ..kernels import registry
+
+            choices = registry.impl_names(choices)
         if self.kernel_impl in choices:
             return self.kernel_impl
         return default
+
+    def tuned_tiles(self, kernel: str, **shape) -> dict:
+        """Block shapes of registered kernel ``kernel`` for ``shape`` under
+        this context's ``tuning`` policy (registry defaults when "off")."""
+        from ..kernels.tuning import tiles_for
+
+        return tiles_for(self, kernel, **shape)
 
     # -- device handles (JAX imported lazily) --------------------------------
 

@@ -204,20 +204,32 @@ def _partials_dispatch(n_bits: int, impl: str, a_tile: int, d_block: int,
     return dispatch
 
 
-@functools.lru_cache(maxsize=None)
+# jit(shard_map(partials)) cached per (context, shape bucket) -- a fresh
+# shard_map per call would retrace (and recompile) every dispatch.  The tile
+# shapes live in the *value*, not the key: when the autotuner hands a bucket
+# new winners, the bucket's entry is rebuilt in place instead of a stale
+# entry pinning the old compiled executable forever.
+_SHARDED_PARTIALS: dict = {}
+
+
 def _sharded_partials(ctx: ExecutionContext, n_bits: int, impl: str,
-                      a_tile: int, d_block: int, interpret: bool | None):
-    """jit(shard_map(partials)) cached per policy -- a fresh shard_map per call
-    would retrace (and recompile) every dispatch."""
+                      a_tile: int, d_block: int, interpret: bool | None,
+                      bucket):
     from jax.sharding import PartitionSpec as P
 
-    return jax.jit(
+    key = (ctx, n_bits, impl, interpret, bucket)
+    hit = _SHARDED_PARTIALS.get(key)
+    if hit is not None and hit[0] == (a_tile, d_block):
+        return hit[1]
+    fn = jax.jit(
         ctx.shard_call(
             _partials_dispatch(n_bits, impl, a_tile, d_block, interpret),
             in_specs=(P(MESH_AXIS),),
             out_specs=(P(None, MESH_AXIS), P(None, MESH_AXIS)),
         )
     )
+    _SHARDED_PARTIALS[key] = ((a_tile, d_block), fn)
+    return fn
 
 
 def behav_partials(
@@ -225,31 +237,45 @@ def behav_partials(
     masks: jnp.ndarray,
     impl: str = "xla",
     a_tile: int | None = None,
-    d_block: int = 8,
+    d_block: int | None = None,
     interpret: bool | None = None,
     ctx: ExecutionContext | None = None,
 ):
     """Dispatch one device evaluation of a (padded) mask batch -> partials.
 
-    When ``ctx`` shards the ``"configs"`` axis and the batch divides evenly
-    into ``n_devices x d_block`` blocks, the D axis is ``shard_map``-ped over
-    the context's mesh: each device runs the identical per-chunk reduction on
-    its contiguous config slice, so the (n_ta, D, 8) partials are bit-identical
-    to the unsharded dispatch (the int64 host combine is unchanged).
+    ``None`` tiles resolve through the kernel registry under the context's
+    ``tuning`` policy (registry defaults when untuned -- ``a_tile`` stays the
+    int32-safe bound, ``d_block=8``).  When ``ctx`` shards the ``"configs"``
+    axis and the batch divides evenly into ``n_devices x d_block`` blocks,
+    the D axis is ``shard_map``-ped over the context's mesh: each device runs
+    the identical per-chunk reduction on its contiguous config slice, so the
+    (n_ta, D, 8) partials are bit-identical to the unsharded dispatch (the
+    int64 host combine is unchanged).
     """
-    a_tile = a_tile or default_a_tile(spec)
     if impl not in ("xla", "pallas"):
         raise ValueError(f"unknown fastchar impl {impl!r}")
+    masks = jnp.asarray(masks)
+    from ..kernels import registry
+    from ..kernels.tuning import tiles_for
+
+    kspec = registry.get(f"fastchar.{impl}")
+    bucket = kspec.bucket(n_bits=spec.n_bits, d=int(masks.shape[0]))
+    if a_tile is None or d_block is None:
+        tiles = tiles_for(ctx, f"fastchar.{impl}",
+                          n_bits=spec.n_bits, d=int(masks.shape[0]))
+        a_tile = tiles["a_tile"] if a_tile is None else a_tile
+        d_block = tiles["d_block"] if d_block is None else d_block
     if ctx is not None and interpret is None:
         interpret = ctx.interpret
 
-    masks = jnp.asarray(masks)
     if (
         ctx is not None
         and ctx.shards("configs")
         and masks.shape[0] % (ctx.device_count * d_block) == 0
     ):
-        fn = _sharded_partials(ctx, spec.n_bits, impl, a_tile, d_block, interpret)
+        fn = _sharded_partials(
+            ctx, spec.n_bits, impl, a_tile, d_block, interpret, bucket
+        )
         return fn(masks)
     return _partials_dispatch(spec.n_bits, impl, a_tile, d_block, interpret)(masks)
 
@@ -279,29 +305,41 @@ def behav_metrics_jax(
     impl: str | None = None,
     batch_size: int = 1024,
     a_tile: int | None = None,
-    d_block: int = 8,
+    d_block: int | None = None,
     interpret: bool | None = None,
     ctx: ExecutionContext | None = None,
 ) -> dict[str, np.ndarray]:
     """Exhaustive BEHAV metrics on accelerator; drop-in for ``behav_metrics``.
 
-    ``impl`` defaults to the context's kernel preference when one applies, then
-    to the Pallas kernel on TPU and the jit-compiled XLA twin elsewhere
-    (interpret-mode Pallas is a correctness path, not a fast path).  Large
+    ``impl`` defaults to the context's kernel preference when one applies
+    (resolved against the registry's fastchar menu), then to the Pallas
+    kernel on TPU and the jit-compiled XLA twin elsewhere (interpret-mode
+    Pallas is a correctness path, not a fast path).  ``None`` tiles resolve
+    through the registry under the context's ``tuning`` policy.  Large
     batches are chunked by ``batch_size`` configs per dispatch to bound the
     (D, 2^N, 2^N) int32 working set of the XLA impl; under a config-sharded
     ``ctx`` each chunk is padded to a whole number of per-device blocks and
     dispatched over the mesh (see :func:`behav_partials`).
     """
     if impl is None and ctx is not None:
-        impl = ctx.resolve_impl(("xla", "pallas"))
+        impl = ctx.resolve_impl("fastchar")
     if impl is None:
         from ..kernels.ops import on_tpu
 
         impl = "pallas" if on_tpu() else "xla"
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown fastchar impl {impl!r}")
     configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
     d = configs.shape[0]
     masks = config_to_masks(spec, configs).astype(np.int32)
+
+    if a_tile is None or d_block is None:
+        from ..kernels.tuning import tiles_for
+
+        tiles = tiles_for(ctx, f"fastchar.{impl}",
+                          n_bits=spec.n_bits, d=min(batch_size, d))
+        a_tile = tiles["a_tile"] if a_tile is None else a_tile
+        d_block = tiles["d_block"] if d_block is None else d_block
 
     block = d_block
     if ctx is not None and ctx.shards("configs"):

@@ -92,6 +92,7 @@ def constraint_ranks(
     viol: jnp.ndarray,
     impl: str = "xla",
     interpret: bool | None = None,
+    tile_map: dict | None = None,
 ) -> jnp.ndarray:
     """(n,) int32 fronts (0 = best), constraint domination; jnp twin of
     ``moo.fast_nondominated_sort``.
@@ -107,7 +108,12 @@ def constraint_ranks(
 
     ``impl="xla"`` builds the (n, n) bool dominance matrix once and counts by
     masked column sums; ``impl="pallas"`` recounts dominators each round with
-    the tiled kernel and never materializes the matrix.
+    the tiled kernel and never materializes the matrix.  ``tile_map`` maps a
+    population size ``n`` to the kernel's ``{"tile", "j_tile"}`` block shapes
+    (``CompiledNSGA2`` pre-resolves tuned tiles there *before* tracing its
+    generation loop -- a ``tuning="search"`` resolution launches kernels and
+    must not happen inside a trace); unmapped sizes fall back to the registry
+    defaults for the population bucket.
     """
     n = objs.shape[0]
     feas = viol <= 0
@@ -115,12 +121,19 @@ def constraint_ranks(
         dom = dominance_matrix(objs, viol)
         count_fn = lambda active: (dom & active[:, None]).sum(0)
     elif impl == "pallas":
+        from ..kernels import registry as _registry
         from ..kernels.moo_kernels import dominance_counts_pallas
         from ..kernels.ops import on_tpu
 
         interpret = (not on_tpu()) if interpret is None else interpret
-        tile = n if n <= 64 else 64
-        pad = (-n) % tile
+        tiles = (tile_map or {}).get(n)
+        if tiles is None:
+            kspec = _registry.get("fastmoo.pallas")
+            tiles = kspec.default_tiles(kspec.bucket(p=n, n_obj=objs.shape[1]))
+        # tiles are powers of two, so padding n to a multiple of the larger
+        # one makes the padded P divisible by both
+        tile, j_tile = tiles["tile"], tiles["j_tile"]
+        pad = (-n) % max(tile, j_tile)
         if pad:  # +inf-violation pad rows: infeasible, inactive, never counted
             objs_p = jnp.concatenate([objs, jnp.zeros((pad, objs.shape[1]), objs.dtype)])
             viol_p = jnp.concatenate([viol, jnp.full((pad,), jnp.inf, viol.dtype)])
@@ -130,7 +143,8 @@ def constraint_ranks(
         def count_fn(active):
             act = jnp.concatenate([active, jnp.zeros(pad, bool)]) if pad else active
             return dominance_counts_pallas(
-                objs_p, viol_p, act, tile=tile, interpret=interpret
+                objs_p, viol_p, act, tile=tile, j_tile=j_tile,
+                interpret=interpret,
             )[:n]
     else:
         raise ValueError(f"unknown fastmoo rank impl {impl!r}")
@@ -252,7 +266,7 @@ class CompiledNSGA2:
             raise ValueError(f"pop_size must be even, got {pop_size}")
         if rank_impl is None:
             rank_impl = (
-                ctx.resolve_impl(("xla", "pallas"), "xla") if ctx else "xla"
+                ctx.resolve_impl("fastmoo", "xla") if ctx else "xla"
             )
         if rank_impl not in ("xla", "pallas"):
             raise ValueError(f"unknown rank_impl {rank_impl!r}")
@@ -267,8 +281,22 @@ class CompiledNSGA2:
         )
         self.record_every = int(record_every)
         self.hv_ref = None if hv_ref is None else np.asarray(hv_ref, np.float64)
+        # rank-kernel tiles are resolved *now*, before the generation loop is
+        # traced: the GA ranks populations of P (gen step) and 2P (env
+        # selection), and a tuning="search" resolution launches kernels, which
+        # must not happen mid-trace
+        tile_map = None
+        if rank_impl == "pallas":
+            from ..kernels.tuning import tiles_for
+
+            tile_map = {
+                n: tiles_for(ctx, "fastmoo.pallas", p=n, n_obj=2)
+                for n in (pop_size, 2 * pop_size)
+            }
+        self._rank_tiles = tile_map
         self._ranks = functools.partial(
-            constraint_ranks, impl=rank_impl, interpret=interpret
+            constraint_ranks, impl=rank_impl, interpret=interpret,
+            tile_map=tile_map,
         )
         self._objs_fn = objs_fn
         self._ctx = ctx
@@ -445,6 +473,14 @@ class CompiledNSGA2:
         lane slice -- lanes never interact, so per-lane results are
         bit-identical to the unsharded vmap and the combine is the host concat
         the caller already does.
+
+        Tuned rank-kernel tiles are baked into the traced program at
+        construction (``__init__`` resolves them before any trace), so an
+        instance's sharded sweep can never go stale -- re-tuned winners
+        arrive via a fresh ``CompiledNSGA2``; the (context, shape bucket)
+        keyed caches live where tiles *can* change under a long-lived
+        context, ``fastchar._sharded_partials`` and fastapp's take-path
+        builders.
         """
         if self._sweep_sharded is None:
             from jax.sharding import PartitionSpec as P

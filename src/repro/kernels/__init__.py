@@ -13,9 +13,44 @@ Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec) with an ``ops.py``
 jit wrapper and a ``ref.py`` pure-jnp oracle.  On this CPU-only container the
 kernels validate under ``interpret=True``; on TPU the same BlockSpecs drive
 HBM->VMEM pipelining.
+
+The DSE engine kernels (char/app/moo) register specs with the **kernel
+registry** (``registry``): tunable block-shape spaces, safe defaults,
+cost-estimate/compiler-params formulas and correctness oracles, searched per
+(shape bucket, device) by the **autotuner** (``tuning``) under an
+``ExecutionContext(tuning=...)`` policy.  ``registry.describe()`` lists every
+registered impl per engine (``examples/operator_dse.py --kernel-impl list``).
 """
 
-from .char_kernels import behav_stats_pallas
-from .ops import axo_matmul, flash_attention, on_tpu, ssd_scan
+import importlib
 
-__all__ = ["axo_matmul", "behav_stats_pallas", "flash_attention", "ssd_scan", "on_tpu"]
+from . import registry, tuning
+
+__all__ = [
+    "axo_matmul",
+    "behav_stats_pallas",
+    "flash_attention",
+    "ssd_scan",
+    "on_tpu",
+    "registry",
+    "tuning",
+]
+
+# The kernel modules pull in JAX + Pallas; the registry/tuning modules are
+# numpy-only on purpose (ExecutionContext consults engine menus from numpy
+# processes).  PEP 562 lazy exports keep `from repro.kernels import
+# axo_matmul` working without making `from repro.kernels import registry`
+# pay the JAX import.
+_LAZY = {
+    "axo_matmul": ".ops",
+    "flash_attention": ".ops",
+    "ssd_scan": ".ops",
+    "on_tpu": ".ops",
+    "behav_stats_pallas": ".char_kernels",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,6 +29,14 @@ operand value 0 and every config's table maps (0, 0) -> 0, so padding
 contributes nothing to the sums (asserted in tests).  Interpret mode (the
 CPU default, see ``kernels.ops.on_tpu``) validates the kernel bit-for-bit
 against the XLA path.
+
+``k_tile`` comes from the kernel registry (spec ``"fastapp.pallas"``):
+``None`` resolves the registry default for the (M, K, N) shape bucket, and a
+context with ``tuning != "off"`` hands tuned tiles down through
+``fastapp.table_matmul_jax``.  The registry also supplies the
+``pl.CostEstimate`` and TPU compiler params -- the D axis is ``parallel``,
+the K axis ``arbitrary`` (it accumulates into a revisited output block), and
+the VMEM limit is sized to the resident table plus the gather tile.
 """
 
 from __future__ import annotations
@@ -38,6 +46,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import registry
 
 __all__ = ["table_gemv_pallas"]
 
@@ -63,21 +74,28 @@ def table_gemv_pallas(
     tables_flat: jnp.ndarray,     # (D, A*B) int32 flattened product tables
     a_codes: jnp.ndarray,         # (M, K) int32 operand-A codes (config-shared)
     b_codes: jnp.ndarray,         # (K, N) int32 operand-B codes
-    k_tile: int = 64,
+    k_tile: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Batched table-matmul: (D, M, N) int32, table VMEM-resident over K.
 
-    K must divide by ``k_tile`` (fastapp pads the codes with zeros).
+    K must divide by ``k_tile`` (fastapp pads the codes with zeros); ``None``
+    resolves the registry default for this shape bucket.
     """
     d, ab = tables_flat.shape
     m, k = a_codes.shape
     k2, n = b_codes.shape
+    n_codes = int(round(ab ** 0.5))
+    spec = registry.get("fastapp.pallas")
+    if k_tile is None:
+        bucket = spec.bucket(n_bits=n_codes.bit_length() - 1, m=m, k=k, n=n)
+        k_tile = spec.default_tiles(bucket)["k_tile"]
     assert k == k2, (k, k2)
     assert k % k_tile == 0, (k, k_tile)
-    n_codes = int(round(ab ** 0.5))
     assert n_codes * n_codes == ab, ab
 
+    cost = spec.cost_estimate(d=d, m=m, k=k, n=n, a=n_codes)
+    params = spec.compiler_params(m=m, k_tile=k_tile, n=n, a=n_codes)
     grid = (d, k // k_tile)
     return pl.pallas_call(
         functools.partial(_kernel, n_codes=n_codes),
@@ -89,5 +107,7 @@ def table_gemv_pallas(
         ],
         out_specs=pl.BlockSpec((1, m, n), lambda i, j: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((d, m, n), jnp.int32),
+        cost_estimate=pl.CostEstimate(**cost),
+        compiler_params=pltpu.TPUCompilerParams(**params),
         interpret=interpret,
     )(tables_flat, a_codes, b_codes)

@@ -36,6 +36,14 @@ oracle).  Channels of the (n_ta, D, 8) outputs:
 
 Tile-size rule: callers must pick ``a_tile`` such that
 ``a_tile * B * max|e| < 2^31`` (see ``fastchar.max_abs_error_bound``).
+
+Block shapes come from the kernel registry (``kernels.registry``, spec
+``"fastchar.pallas"``): passing ``a_tile``/``d_block`` as ``None`` resolves
+the registry's int32-safe defaults, and contexts with ``tuning != "off"``
+hand tuned tiles down through ``fastchar.behav_partials``.  The registry also
+supplies the ``pl.CostEstimate`` and TPU compiler params (both grid axes are
+``parallel`` -- every (i, j) step owns a disjoint output block -- and the
+VMEM limit is sized to double-buffered blocks).
 """
 
 from __future__ import annotations
@@ -45,6 +53,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import registry
 
 __all__ = ["behav_stats_pallas", "N_CHAN"]
 
@@ -96,22 +107,30 @@ def behav_stats_pallas(
     small: jnp.ndarray,           # (R, D, 4, B) int32
     exact: jnp.ndarray,           # (A, B) int32
     w: jnp.ndarray,               # (A, B) f32
-    d_block: int = 8,
-    a_tile: int = 64,
+    d_block: int | None = None,
+    a_tile: int | None = None,
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Tiled BEHAV partial statistics; returns (int_partials, rel_partials).
 
     Shapes: (A // a_tile, D, N_CHAN) int32 and float32.  D must divide by
     ``d_block`` and A by ``a_tile`` (``fastchar`` pads the config batch).
+    ``None`` tiles resolve the registry defaults for this shape bucket.
     """
     rows, d, four, b = small.shape
     a = exact.shape[0]
+    spec = registry.get("fastchar.pallas")
+    if d_block is None or a_tile is None:
+        tiles = spec.default_tiles(spec.bucket(n_bits=a.bit_length() - 1, d=d))
+        d_block = tiles["d_block"] if d_block is None else d_block
+        a_tile = tiles["a_tile"] if a_tile is None else a_tile
     assert four == 4 and exact.shape == (a, b) and w.shape == (a, b)
     assert d % d_block == 0, (d, d_block)
     assert a % a_tile == 0, (a, a_tile)
     n_ta = a // a_tile
 
+    cost = spec.cost_estimate(rows=rows, d=d, a=a, b=b, a_tile=a_tile)
+    params = spec.compiler_params(rows=rows, d_block=d_block, a_tile=a_tile, b=b)
     grid = (d // d_block, n_ta)
     return pl.pallas_call(
         functools.partial(_kernel, rows=rows, a_tile=a_tile),
@@ -129,5 +148,7 @@ def behav_stats_pallas(
             jax.ShapeDtypeStruct((n_ta, d, N_CHAN), jnp.int32),
             jax.ShapeDtypeStruct((n_ta, d, N_CHAN), jnp.float32),
         ],
+        cost_estimate=pl.CostEstimate(**cost),
+        compiler_params=pltpu.TPUCompilerParams(**params),
         interpret=interpret,
     )(small, exact, w)

@@ -4,7 +4,7 @@ Non-dominated sorting is the per-generation hot spot of an on-device NSGA-II:
 every front-peeling round needs, for each point, the number of still-active
 points that constraint-dominate it.  The naive formulation compares all pairs
 at once and materializes a ``(P, P, n_obj)`` comparison tensor; this kernel
-computes the same counts tile-by-tile so only a ``(Tj, Ti)`` comparison tile
+computes the same counts tile-by-tile so only a ``(Ti, Tj)`` comparison tile
 ever exists at a time, mirroring ``char_kernels``/``app_kernels`` (interpret
 mode is the validated CPU path, the XLA twin in ``core.fastmoo`` is the
 off-TPU fast path).
@@ -23,9 +23,20 @@ self-attention kernel:
   objs: (P, n_obj) f32,  viol: (P, 1) f32,  active: (P, 1) i32 mask -- only
   active *dominators* are counted (every row of the output is computed).
 
+Block layout is 2-D-friendly: the comparison tile is ``(tile, j_tile)`` with
+the **dominator** (j) axis innermost, so with the registry default
+``j_tile=128`` every tile maps onto full TPU vector lanes instead of the
+lane-hostile ``(tile, 1)`` columns of the original square tiling.  Both tile
+sizes come from the kernel registry (spec ``"fastmoo.pallas"``; ``None``
+resolves the bucket defaults, tuned contexts hand winners down through
+``fastmoo.constraint_ranks``), as do the ``pl.CostEstimate`` and compiler
+params (i is ``parallel``, j ``arbitrary``: it accumulates into a revisited
+output block).
+
 Output: (P, 1) int32 -- per-point count of active dominators.  Grid is
-``(P // tile, P // tile)``; the j axis accumulates into the output block
-(``@pl.when(j == 0)`` init), the standard revisiting-output reduction.
+``(P // tile, P // j_tile)``; P must divide by both tiles (fastmoo pads with
+inactive +inf-violation points, which are infeasible, inactive and never
+counted).
 """
 
 from __future__ import annotations
@@ -35,6 +46,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import registry
 
 __all__ = ["dominance_counts_pallas"]
 
@@ -53,20 +67,20 @@ def _kernel(oi_ref, vi_ref, oj_ref, vj_ref, aj_ref, out_ref, *, n_obj: int):
     for k in range(n_obj):                       # static unroll over objectives
         ok_i = oi_ref[...][:, k]                 # (Ti,)
         ok_j = oj_ref[...][:, k]                 # (Tj,)
-        le_k = ok_j[:, None] <= ok_i[None, :]    # (Tj, Ti)
-        lt_k = ok_j[:, None] < ok_i[None, :]
+        le_k = ok_j[None, :] <= ok_i[:, None]    # (Ti, Tj): j lanes innermost
+        lt_k = ok_j[None, :] < ok_i[:, None]
         le = le_k if le is None else le & le_k
         lt = lt_k if lt is None else lt | lt_k
 
     obj_dom = le & lt
-    both_feas = fj[:, None] & fi[None, :]
-    both_infeas = (~fj)[:, None] & (~fi)[None, :]
+    both_feas = fi[:, None] & fj[None, :]
+    both_infeas = (~fi)[:, None] & (~fj)[None, :]
     dom = (both_feas & obj_dom)
-    dom |= fj[:, None] & (~fi)[None, :]
-    dom |= both_infeas & (vj[:, None] < vi[None, :])
+    dom |= (~fi)[:, None] & fj[None, :]
+    dom |= both_infeas & (vj[None, :] < vi[:, None])
 
     act = aj_ref[...][:, 0] != 0                 # (Tj,)
-    part = (dom & act[:, None]).astype(jnp.int32).sum(axis=0)[:, None]
+    part = (dom & act[None, :]).astype(jnp.int32).sum(axis=1)[:, None]
 
     @pl.when(j == 0)
     def _init():
@@ -77,37 +91,50 @@ def _kernel(oi_ref, vi_ref, oj_ref, vj_ref, aj_ref, out_ref, *, n_obj: int):
         out_ref[...] += part
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "j_tile", "interpret"))
 def dominance_counts_pallas(
     objs: jnp.ndarray,            # (P, n_obj) f32
     viol: jnp.ndarray,            # (P,) f32
     active: jnp.ndarray,          # (P,) bool/i32 -- dominators to count
-    tile: int = 64,
+    tile: int | None = None,
+    j_tile: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Per-point count of active constraint-dominators: (P,) int32.
 
-    P must divide by ``tile`` (fastmoo's populations are powers of two; pad
-    with inactive +inf-violation points otherwise).
+    P must divide by ``tile`` and ``j_tile`` (fastmoo pads with inactive
+    +inf-violation points); ``None`` tiles resolve the registry defaults for
+    this population bucket.
     """
     p, n_obj = objs.shape
+    spec = registry.get("fastmoo.pallas")
+    if tile is None or j_tile is None:
+        tiles = spec.default_tiles(spec.bucket(p=p, n_obj=n_obj))
+        tile = (tiles["tile"] if tile is None else tile)
+        j_tile = (tiles["j_tile"] if j_tile is None else j_tile)
+    tile, j_tile = min(tile, p), min(j_tile, p)
     assert p % tile == 0, (p, tile)
+    assert p % j_tile == 0, (p, j_tile)
     v2 = viol.astype(jnp.float32).reshape(p, 1)
     a2 = active.astype(jnp.int32).reshape(p, 1)
 
-    grid = (p // tile, p // tile)
+    cost = spec.cost_estimate(p=p, n_obj=n_obj)
+    params = spec.compiler_params(tile=tile, j_tile=j_tile, n_obj=n_obj)
+    grid = (p // tile, p // j_tile)
     out = pl.pallas_call(
         functools.partial(_kernel, n_obj=n_obj),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile, n_obj), lambda i, j: (i, 0)),
             pl.BlockSpec((tile, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((tile, n_obj), lambda i, j: (j, 0)),
-            pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
-            pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((j_tile, n_obj), lambda i, j: (j, 0)),
+            pl.BlockSpec((j_tile, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((j_tile, 1), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((tile, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        cost_estimate=pl.CostEstimate(**cost),
+        compiler_params=pltpu.TPUCompilerParams(**params),
         interpret=interpret,
     )(objs.astype(jnp.float32), v2, objs.astype(jnp.float32), v2, a2)
     return out[:, 0]

@@ -11,9 +11,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .axo_matmul import axo_matmul_pallas
-from .flash_attention import flash_attention_pallas
-from .ssd_scan import ssd_scan_pallas
+# the *_kernel module names keep the pallas_call impls from shadowing the
+# identically-named lazy function exports on the package (PEP 562 __getattr__
+# in __init__.py only fires for attributes the submodule bindings would
+# otherwise occupy)
+from .axo_matmul_kernel import axo_matmul_pallas
+from .flash_attention_kernel import flash_attention_pallas
+from .ssd_scan_kernel import ssd_scan_pallas
 
 __all__ = ["on_tpu", "axo_matmul", "flash_attention", "ssd_scan"]
 

@@ -1,0 +1,457 @@
+"""Unified kernel registry: one spec per Pallas/XLA implementation.
+
+PRs 1-4 grew three accelerator kernel families -- the characterization BEHAV
+reduction (``char_kernels.behav_stats_pallas`` + its XLA twin), the
+application table-GEMV (``app_kernels.table_gemv_pallas`` + gather/GEMM
+fallbacks) and the NSGA-II dominance counts (``moo_kernels.
+dominance_counts_pallas`` + the dominance-matrix XLA twin) -- and each
+hard-coded block shapes chosen for int32-overflow safety, not occupancy.
+This module is the single place every implementation registers:
+
+  * its **tunable block-shape space** (ordered ``(param, candidates)`` pairs),
+  * **safe defaults** (a function of the shape bucket -- e.g. the char
+    engine's int32-safe ``a_tile``),
+  * a **constraint** predicate filtering candidates per shape bucket (int32
+    partial-sum bounds, divisibility, VMEM fit),
+  * **cost-estimate** and **compiler-params** formulas (plain dicts; the
+    kernel files wrap them into ``pl.CostEstimate`` /
+    ``pltpu.TPUCompilerParams`` -- dimension semantics + VMEM limits),
+  * a **correctness oracle** (the reference implementation every tuned tile
+    candidate must match bit-for-bit under interpret mode; see
+    ``kernels.tuning``).
+
+The registry itself is pure data: importing it pulls in neither JAX nor the
+kernel modules (implementations and oracles are referenced by
+``"module:attr"`` strings and resolved lazily), so
+``repro.core.engine.ExecutionContext`` can consult engine menus without
+dragging device code into numpy-only processes.
+
+Engines resolve implementations through
+:meth:`repro.core.engine.ExecutionContext.resolve_impl` (which reads the
+per-engine menus registered here) and tile shapes through
+:func:`repro.kernels.tuning.tiles_for` (which honors the context's
+``tuning="off"|"cached"|"search"`` policy).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Callable
+
+__all__ = [
+    "KernelSpec",
+    "register",
+    "get",
+    "specs_for",
+    "impl_names",
+    "registered",
+    "describe",
+    "ENGINES",
+]
+
+ENGINES = ("fastchar", "fastapp", "fastmoo")
+
+
+def _pow2_bucket(x: int, cap: int = 1 << 14) -> int:
+    """Smallest power of two >= x (>= 1), capped -- the shape-bucket rule."""
+    x = max(int(x), 1)
+    b = 1
+    while b < x and b < cap:
+        b <<= 1
+    return b
+
+
+def _resolve_ref(ref: str):
+    mod, attr = ref.split(":")
+    return getattr(importlib.import_module(mod), attr)
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel implementation.
+
+    ``fn_ref`` / ``oracle_ref`` are lazy ``"module:attr"`` references: ``fn``
+    is the engine-level entry point the autotuner times (signature
+    ``fn(bucket, tiles) -> outputs``, see ``kernels.tuning`` for the per-
+    engine harnesses), ``oracle`` the reference implementation parity is
+    checked against.  ``tunables`` is the ordered block-shape search space;
+    ``defaults_fn(bucket)`` the safe (untuned) tiles; ``constraint(bucket,
+    tiles)`` filters candidates; ``cost_fn`` / ``params_fn`` return plain
+    dicts the kernel files wrap into ``pl.CostEstimate`` and
+    ``pltpu.TPUCompilerParams``.
+    """
+
+    name: str                                   # "fastchar.pallas", ...
+    engine: str                                 # one of ENGINES
+    impl: str                                   # "pallas" | "xla" | "gemm"
+    fn_ref: str                                 # harness entry "module:attr"
+    oracle_ref: str | None = None               # reference impl "module:attr"
+    tunables: tuple = ()                        # ((param, (candidates...)),...)
+    defaults_fn: Callable | None = None         # bucket -> {param: value}
+    bucket_fn: Callable | None = None           # (**shape) -> hashable bucket
+    constraint: Callable | None = None          # (bucket, tiles) -> bool
+    cost_fn: Callable | None = None             # (shape kwargs) -> dict
+    params_fn: Callable | None = None           # (shape kwargs) -> dict
+    description: str = ""
+
+    # -- lazy references ------------------------------------------------------
+
+    @property
+    def fn(self):
+        return _resolve_ref(self.fn_ref)
+
+    @property
+    def oracle(self):
+        return None if self.oracle_ref is None else _resolve_ref(self.oracle_ref)
+
+    # -- tile space -----------------------------------------------------------
+
+    @property
+    def tunable_names(self) -> tuple:
+        return tuple(p for p, _ in self.tunables)
+
+    def bucket(self, **shape):
+        """Shape bucket for ``shape`` -- the autotune cache key component."""
+        if self.bucket_fn is None:
+            return ()
+        return self.bucket_fn(**shape)
+
+    def default_tiles(self, bucket) -> dict:
+        """Safe tiles for ``bucket``: the spec's defaults, shrunk to the
+        largest admissible candidate when they violate the bucket constraint.
+        Best-effort when the whole space is inadmissible (a bucket no tile
+        satisfies, e.g. blocks that cannot fit VMEM at any k_tile): the raw
+        defaults come back unchecked, and it is the *caller's* job to pick a
+        different impl for such shapes (the engines' auto-selection does)."""
+        tiles = dict(self.defaults_fn(bucket)) if self.defaults_fn else {}
+        if tiles and self.constraint is not None and not self.constraint(bucket, tiles):
+            cands = self.candidates(bucket)
+            if cands:
+                return cands[-1]
+        return tiles
+
+    def candidates(self, bucket) -> list[dict]:
+        """Every admissible tile assignment for ``bucket`` (full product)."""
+        combos: list[dict] = [{}]
+        for param, values in self.tunables:
+            combos = [{**c, param: v} for c in combos for v in values]
+        if self.constraint is not None:
+            combos = [c for c in combos if self.constraint(bucket, c)]
+        return combos
+
+    def cost_estimate(self, **shape) -> dict | None:
+        return None if self.cost_fn is None else self.cost_fn(**shape)
+
+    def compiler_params(self, **shape) -> dict | None:
+        return None if self.params_fn is None else self.params_fn(**shape)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.engine not in ENGINES:
+        raise ValueError(f"unknown engine {spec.engine!r} (not in {ENGINES})")
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel {name!r} registered (have {sorted(_REGISTRY)})"
+        ) from None
+
+
+def registered() -> tuple[KernelSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def specs_for(engine: str) -> tuple[KernelSpec, ...]:
+    return tuple(s for s in _REGISTRY.values() if s.engine == engine)
+
+
+def impl_names(engine: str) -> tuple[str, ...]:
+    """The engine's impl menu, in registration (= preference-listing) order."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (not in {ENGINES})")
+    return tuple(s.impl for s in _REGISTRY.values() if s.engine == engine)
+
+
+def describe() -> str:
+    """Human-readable registry listing (``operator_dse.py --kernel-impl list``)."""
+    lines = []
+    for engine in ENGINES:
+        lines.append(f"{engine}:")
+        for s in specs_for(engine):
+            space = ", ".join(
+                f"{p} in {list(v)}" for p, v in s.tunables
+            ) or "no tunables"
+            lines.append(f"  {s.impl:7s} {s.name:16s} {space}")
+            if s.description:
+                lines.append(f"          {s.description}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Registered specs
+# ---------------------------------------------------------------------------
+#
+# All formulas below are pure host python over the shape bucket; anything that
+# needs the operator model imports it lazily (numpy-only, no JAX).
+
+
+def _char_bound(n_bits: int) -> int:
+    from repro.core.operator_model import spec_for
+
+    from_spec = spec_for(n_bits)
+    row_mag = 1 << (from_spec.width - 1)
+    approx = row_mag * ((4**from_spec.rows - 1) // 3)
+    return approx + (1 << (2 * n_bits - 2))
+
+
+def _char_bucket(*, n_bits: int, d: int):
+    return (int(n_bits), _pow2_bucket(d, cap=1024))
+
+
+def _char_constraint(bucket, tiles) -> bool:
+    n_bits, d = bucket
+    a = 1 << n_bits
+    a_tile, d_block = tiles["a_tile"], tiles["d_block"]
+    if a_tile > a or a % a_tile or d_block > d:
+        return False
+    # int32 safety: every per-tile partial sum must stay < 2^31 (the exact
+    # int64 host combine depends on exactly-representable tile partials)
+    return a_tile * a * _char_bound(n_bits) < (1 << 31)
+
+
+def _char_defaults(bucket) -> dict:
+    n_bits, d = bucket
+    a = 1 << n_bits
+    tile = a
+    while tile > 1 and tile * a * _char_bound(n_bits) >= (1 << 30):
+        tile //= 2
+    return {"a_tile": tile, "d_block": min(8, d)}
+
+
+def _char_cost(*, rows: int, d: int, a: int, b: int, a_tile: int, **_) -> dict:
+    # per element of the (D, A, B) error table: R plane-selects + shift-adds,
+    # the |e| decomposition and 6 reduction channels; outputs are the two
+    # (A/a_tile, D, 8) partial stacks
+    return {
+        "flops": d * a * b * (6 * rows + 12),
+        "bytes_accessed": 4 * (rows * d * 4 * b + 2 * a * b) + 8 * (a // a_tile) * d * 8,
+        "transcendentals": 0,
+    }
+
+
+def _char_params(*, rows: int, d_block: int, a_tile: int, b: int, **_) -> dict:
+    block_bytes = 4 * (rows * d_block * 4 * b + 2 * a_tile * b + d_block * a_tile * b)
+    return {
+        # output blocks are disjoint across both grid axes
+        "dimension_semantics": ("parallel", "parallel"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
+def _app_bucket(*, n_bits: int, d: int, m: int, k: int, n: int):
+    return (
+        int(n_bits),
+        _pow2_bucket(d, cap=1024),
+        _pow2_bucket(m),
+        _pow2_bucket(k),
+        _pow2_bucket(n),
+    )
+
+
+def _app_constraint(bucket, tiles) -> bool:
+    n_bits, d, m, k, n = bucket
+    k_tile = tiles["k_tile"]
+    if k_tile > _pow2_bucket(k):  # never tile wider than the padded K
+        return False
+    a = 1 << n_bits
+    # VMEM fit: the resident flattened table + the (M, k_tile, N) gather tile
+    return 4 * (a * a + m * k_tile * n + m * k_tile + k_tile * n) < (12 << 20)
+
+
+def _app_xla_constraint(bucket, tiles) -> bool:
+    # chunks wider than the config batch degenerate to d (min() in the
+    # engine), so they would duplicate the d-sized candidate
+    return tiles["d_chunk"] <= bucket[1]
+
+
+def _app_defaults(bucket) -> dict:
+    _, _, _, k, _ = bucket
+    return {"k_tile": min(64, _pow2_bucket(k))}
+
+
+def _app_xla_defaults(bucket) -> dict:
+    return {"d_chunk": min(8, bucket[1])}
+
+
+def _app_cost(*, d: int, m: int, k: int, n: int, a: int, **_) -> dict:
+    return {
+        "flops": 2 * d * m * k * n,
+        "bytes_accessed": 4 * (d * a * a + m * k + k * n + d * m * n),
+        "transcendentals": 0,
+    }
+
+
+def _app_params(*, m: int, k_tile: int, n: int, a: int, **_) -> dict:
+    block_bytes = 4 * (a * a + m * k_tile * n + m * k_tile + k_tile * n + m * n)
+    return {
+        # the k axis accumulates into a revisited output block: sequential
+        "dimension_semantics": ("parallel", "arbitrary"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
+def _moo_bucket(*, p: int, n_obj: int):
+    return (_pow2_bucket(p), int(n_obj))
+
+
+def _moo_constraint(bucket, tiles) -> bool:
+    p, _ = bucket
+    tile, j_tile = tiles["tile"], tiles["j_tile"]
+    return tile <= p and j_tile <= p
+
+
+def _moo_defaults(bucket) -> dict:
+    p, _ = bucket
+    # the 2-D-friendly layout: j (dominator) tiles sized to the 128 lanes
+    return {"tile": min(64, p), "j_tile": min(128, p)}
+
+
+def _moo_cost(*, p: int, n_obj: int, **_) -> dict:
+    return {
+        "flops": p * p * (4 * n_obj + 8),
+        "bytes_accessed": 4 * (2 * p * n_obj + 4 * p),
+        "transcendentals": 0,
+    }
+
+
+def _moo_params(*, tile: int, j_tile: int, n_obj: int, **_) -> dict:
+    block_bytes = 4 * (2 * (tile + j_tile) * (n_obj + 2) + tile * j_tile)
+    return {
+        # j revisits the output block (accumulation): sequential
+        "dimension_semantics": ("parallel", "arbitrary"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
+# -- fastchar: BEHAV characterization partials ------------------------------
+
+register(KernelSpec(
+    name="fastchar.xla",
+    engine="fastchar",
+    impl="xla",
+    fn_ref="repro.kernels.tuning:_run_fastchar",
+    oracle_ref="repro.kernels.tuning:_oracle_fastchar",
+    tunables=(
+        ("a_tile", (8, 16, 32, 64, 128, 256)),
+        ("d_block", (2, 4, 8, 16, 32)),
+    ),
+    defaults_fn=_char_defaults,
+    bucket_fn=_char_bucket,
+    constraint=_char_constraint,
+    description="lax.map-chunked XLA twin of the Pallas BEHAV reduction",
+))
+
+register(KernelSpec(
+    name="fastchar.pallas",
+    engine="fastchar",
+    impl="pallas",
+    fn_ref="repro.kernels.tuning:_run_fastchar",
+    oracle_ref="repro.kernels.tuning:_oracle_fastchar",
+    tunables=(
+        ("a_tile", (8, 16, 32, 64, 128, 256)),
+        ("d_block", (2, 4, 8, 16, 32)),
+    ),
+    defaults_fn=_char_defaults,
+    bucket_fn=_char_bucket,
+    constraint=_char_constraint,
+    cost_fn=_char_cost,
+    params_fn=_char_params,
+    description="tiled error-table reconstruction + per-A-tile partial stats",
+))
+
+# -- fastapp: table arithmetic ----------------------------------------------
+
+register(KernelSpec(
+    name="fastapp.gemm",
+    engine="fastapp",
+    impl="gemm",
+    fn_ref="repro.kernels.tuning:_run_fastapp",
+    oracle_ref="repro.kernels.tuning:_oracle_fastapp",
+    tunables=(),
+    bucket_fn=_app_bucket,
+    description="pair-plane masked f32 GEMMs over the tiny per-row tables",
+))
+
+register(KernelSpec(
+    name="fastapp.xla",
+    engine="fastapp",
+    impl="xla",
+    fn_ref="repro.kernels.tuning:_run_fastapp",
+    oracle_ref="repro.kernels.tuning:_oracle_fastapp",
+    tunables=(("d_chunk", (2, 4, 8, 16, 32)),),
+    defaults_fn=_app_xla_defaults,
+    bucket_fn=_app_bucket,
+    constraint=_app_xla_constraint,
+    description="flattened jnp.take gathers tiled by lax.map config chunks",
+))
+
+register(KernelSpec(
+    name="fastapp.pallas",
+    engine="fastapp",
+    impl="pallas",
+    fn_ref="repro.kernels.tuning:_run_fastapp",
+    oracle_ref="repro.kernels.tuning:_oracle_fastapp",
+    tunables=(("k_tile", (16, 32, 64, 128, 256)),),
+    defaults_fn=_app_defaults,
+    bucket_fn=_app_bucket,
+    constraint=_app_constraint,
+    cost_fn=_app_cost,
+    params_fn=_app_params,
+    description="K-tiled batched table-GEMV, per-config table VMEM-resident",
+))
+
+# -- fastmoo: dominance counts ----------------------------------------------
+
+register(KernelSpec(
+    name="fastmoo.xla",
+    engine="fastmoo",
+    impl="xla",
+    fn_ref="repro.kernels.tuning:_run_fastmoo",
+    oracle_ref="repro.kernels.tuning:_oracle_fastmoo",
+    tunables=(),
+    bucket_fn=_moo_bucket,
+    description="(P, P, n_obj) dominance-matrix counts (masked column sums)",
+))
+
+register(KernelSpec(
+    name="fastmoo.pallas",
+    engine="fastmoo",
+    impl="pallas",
+    fn_ref="repro.kernels.tuning:_run_fastmoo",
+    oracle_ref="repro.kernels.tuning:_oracle_fastmoo",
+    tunables=(
+        ("tile", (8, 16, 32, 64, 128)),
+        ("j_tile", (8, 16, 32, 64, 128)),
+    ),
+    defaults_fn=_moo_defaults,
+    bucket_fn=_moo_bucket,
+    constraint=_moo_constraint,
+    cost_fn=_moo_cost,
+    params_fn=_moo_params,
+    description="tiled dominance counts, 2-D-friendly (tile, j_tile) blocks",
+))

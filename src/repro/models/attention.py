@@ -3,7 +3,7 @@
 The training/prefill path is *chunked* online-softmax attention (lax.scan over KV
 blocks inside a map over Q blocks) so a 32k-token prefill never materializes an
 (S x S) score matrix -- this is the XLA-level equivalent of the Pallas flash
-kernel in ``repro.kernels.flash_attention`` (which is the TPU deployment path and
+kernel in ``repro.kernels.flash_attention_kernel`` (the TPU deployment path and
 is validated against the same reference).  Decode (Sq == 1) uses direct softmax
 over the cache.
 

@@ -209,6 +209,73 @@ def test_dse_settings_replace_keeps_context():
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# PRNG policy threaded into dataset generation (ROADMAP follow-on)
+# ---------------------------------------------------------------------------
+
+
+def test_gen_random_default_impl_parity():
+    """Under the default PRNG policy, context-threaded generation is
+    bit-identical to the legacy numpy stream (caches stay valid)."""
+    from repro.core.dataset import gen_random
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(4)
+    legacy = gen_random(spec, 16, seed=5)
+    for ctx in (None, ExecutionContext(), ExecutionContext(backend="jax")):
+        np.testing.assert_array_equal(gen_random(spec, 16, seed=5, ctx=ctx), legacy)
+
+
+def test_gen_random_named_prng_impl_generates_on_device():
+    """A named prng_impl switches to jax.random generation keyed by the
+    context's typed keys: deterministic per seed, threefry matches the raw
+    PRNGKey stream, rbg differs from the legacy numpy stream."""
+    import jax
+
+    from repro.core.dataset import gen_random
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(4)
+    ctx3 = ExecutionContext(backend="jax", prng_impl="threefry2x32")
+    out = gen_random(spec, 16, seed=5, ctx=ctx3)
+    np.testing.assert_array_equal(out, gen_random(spec, 16, seed=5, ctx=ctx3))
+    ref = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (16, spec.n_luts), 0, 2,
+                           dtype="uint8")
+    )
+    np.testing.assert_array_equal(out, ref)
+
+    rbg = gen_random(spec, 16, seed=5, ctx=ExecutionContext(backend="jax",
+                                                            prng_impl="rbg"))
+    assert rbg.shape == (16, spec.n_luts) and set(np.unique(rbg)) <= {0, 1}
+    assert not np.array_equal(rbg, gen_random(spec, 16, seed=5))
+
+
+def test_build_training_dataset_threads_context_prng(tmp_path):
+    """build_training_dataset forwards the context to gen_random: default
+    policy keeps the historical configs; a named impl changes the RANDOM set."""
+    from repro.core.dataset import build_training_dataset
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(4)
+    base = build_training_dataset(spec, n_random=8, seed=1,
+                                  include_pattern=False)
+    via_ctx = build_training_dataset(
+        spec, n_random=8, seed=1, include_pattern=False,
+        backend=ExecutionContext(backend="jax"),
+    )
+    np.testing.assert_array_equal(base.configs, via_ctx.configs)
+    for k in base.metrics:
+        np.testing.assert_allclose(base.metrics[k], via_ctx.metrics[k],
+                                   rtol=1e-6)
+
+    rbg = build_training_dataset(
+        spec, n_random=8, seed=1, include_pattern=False,
+        backend=ExecutionContext(backend="jax", prng_impl="rbg"),
+    )
+    assert not np.array_equal(base.configs, rbg.configs)
+
+
 def test_metrics_and_solver_shims_accept_strings_and_contexts():
     from repro.core.metrics import behav_metrics
     from repro.core.operator_model import spec_for

@@ -1,0 +1,149 @@
+"""Kernel registry: per-engine menus, constrained tile spaces, and the
+acceptance property -- every registered impl is bit-identical to its oracle
+under interpret mode for ALL admissible tile candidates (the full tunable
+space at a small bucket, exhaustively enumerated)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ExecutionContext
+from repro.kernels import registry, tuning
+
+# Small buckets keep the exhaustive candidate sweep fast (4-bit operator,
+# tiny populations) while still spanning multi-tile grids in every axis.
+SMALL_BUCKETS = {
+    "fastchar": dict(n_bits=4, d=8),
+    "fastapp": dict(n_bits=4, d=8, m=8, k=24, n=8),
+    "fastmoo": dict(p=48, n_obj=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry contents + menus
+# ---------------------------------------------------------------------------
+
+
+def test_every_engine_has_registered_impls():
+    assert registry.impl_names("fastchar") == ("xla", "pallas")
+    assert registry.impl_names("fastapp") == ("gemm", "xla", "pallas")
+    assert registry.impl_names("fastmoo") == ("xla", "pallas")
+    with pytest.raises(ValueError):
+        registry.impl_names("fastray")
+
+
+def test_get_unknown_kernel_raises():
+    with pytest.raises(KeyError, match="no kernel"):
+        registry.get("fastchar.cuda")
+
+
+def test_duplicate_registration_rejected():
+    spec = registry.get("fastchar.pallas")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(spec)
+
+
+def test_describe_lists_every_spec():
+    text = registry.describe()
+    for s in registry.registered():
+        assert s.name in text
+
+
+def test_resolve_impl_engine_names_and_legacy_tuples():
+    ctx = ExecutionContext(backend="jax", kernel_impl="gemm")
+    # engine names read the registry menus
+    assert ctx.resolve_impl("fastapp") == "gemm"
+    assert ctx.resolve_impl("fastchar") is None
+    assert ctx.resolve_impl("fastmoo", "xla") == "xla"
+    # legacy tuple form keeps working
+    assert ctx.resolve_impl(("gemm", "xla")) == "gemm"
+    assert ctx.resolve_impl(("xla", "pallas"), "xla") == "xla"
+
+
+def test_tuning_policy_validated_eagerly():
+    assert ExecutionContext(tuning="cached").tuning == "cached"
+    with pytest.raises(ValueError, match="tuning"):
+        ExecutionContext(tuning="always")
+
+
+# ---------------------------------------------------------------------------
+# Tile spaces
+# ---------------------------------------------------------------------------
+
+
+def test_char_candidates_respect_int32_bound():
+    spec = registry.get("fastchar.pallas")
+    bucket = spec.bucket(n_bits=8, d=256)
+    cands = spec.candidates(bucket)
+    assert cands, "8-bit bucket must admit candidates"
+    for tiles in cands:
+        a_tile = tiles["a_tile"]
+        assert 256 % a_tile == 0
+        assert a_tile * 256 * 59904 < (1 << 31)  # max_abs_error_bound(8x8)
+    # the full 256-wide A tile overflows int32 partials and must be excluded
+    assert not any(t["a_tile"] == 256 for t in cands)
+
+
+def test_default_tiles_are_admissible_everywhere():
+    for spec in registry.registered():
+        if not spec.tunables:
+            continue
+        engine_shape = SMALL_BUCKETS[spec.engine]
+        for shape in (engine_shape,):
+            bucket = spec.bucket(**shape)
+            tiles = spec.default_tiles(bucket)
+            assert spec.constraint is None or spec.constraint(bucket, tiles), (
+                spec.name, bucket, tiles
+            )
+
+
+def test_cost_and_compiler_params_are_plain_dicts():
+    spec = registry.get("fastchar.pallas")
+    cost = spec.cost_estimate(rows=2, d=8, a=16, b=16, a_tile=8)
+    assert set(cost) == {"flops", "bytes_accessed", "transcendentals"}
+    params = spec.compiler_params(rows=2, d_block=4, a_tile=8, b=16)
+    assert params["dimension_semantics"] == ("parallel", "parallel")
+    assert params["vmem_limit_bytes"] >= (4 << 20)
+    gemv = registry.get("fastapp.pallas")
+    assert gemv.compiler_params(m=8, k_tile=16, n=8, a=16)[
+        "dimension_semantics"
+    ] == ("parallel", "arbitrary")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance property: oracle parity over the whole tile space
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", [s.name for s in registry.registered()])
+def test_every_tile_candidate_matches_oracle(name):
+    """Exhaustive property over the admissible tile space: each candidate's
+    integer outputs are bit-identical to the oracle (f32 channels ~1e-6)."""
+    spec = registry.get(name)
+    bucket = spec.bucket(**SMALL_BUCKETS[spec.engine])
+    oracle = tuning.oracle_case(spec, bucket)
+    cands = spec.candidates(bucket) or [spec.default_tiles(bucket)]
+    assert len(cands) >= 1
+    for tiles in cands:
+        exact_r, close_r = tuning.run_case(spec, bucket, tiles)
+        for r, o in zip(exact_r, oracle[0]):
+            np.testing.assert_array_equal(
+                np.asarray(r), np.asarray(o),
+                err_msg=f"{name} tiles={tiles}",
+            )
+        for r, o in zip(close_r, oracle[1]):
+            np.testing.assert_allclose(
+                np.asarray(r), np.asarray(o), rtol=1e-6, atol=1e-6,
+                err_msg=f"{name} tiles={tiles}",
+            )
+
+
+def test_moo_2d_friendly_default_layout():
+    """The dominance kernel's registered default is the (tile, 128) layout on
+    big-population buckets (j = lane axis), shrinking with the bucket."""
+    spec = registry.get("fastmoo.pallas")
+    assert spec.default_tiles(spec.bucket(p=512, n_obj=2)) == {
+        "tile": 64, "j_tile": 128,
+    }
+    assert spec.default_tiles(spec.bucket(p=16, n_obj=2)) == {
+        "tile": 16, "j_tile": 16,
+    }

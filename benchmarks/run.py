@@ -30,6 +30,7 @@ BENCHES = [
     "fastapp",        # batched application-BEHAV engine vs numpy oracle
     "fastmoo",        # device NSGA-II engine vs numpy oracle GA
     "shard",          # multi-device ExecutionContext scaling (forced host devs)
+    "serving",        # AxO-deployed LM serving: tokens/sec vs rank vs BEHAV
 ]
 
 

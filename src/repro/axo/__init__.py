@@ -1,3 +1,17 @@
-from .deploy import AxOOperator, axo_linear, quantize_tensor
+from .deploy import (
+    AXO_LAYERS,
+    AxODeployment,
+    AxOOperator,
+    axo_linear,
+    deploy_axo,
+    quantize_tensor,
+)
 
-__all__ = ["AxOOperator", "axo_linear", "quantize_tensor"]
+__all__ = [
+    "AXO_LAYERS",
+    "AxODeployment",
+    "AxOOperator",
+    "axo_linear",
+    "deploy_axo",
+    "quantize_tensor",
+]

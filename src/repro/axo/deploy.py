@@ -8,8 +8,15 @@ serving path:
      R is a quality knob characterized with the same BEHAV metrics as the
      operator itself (``rank_behav``).
   2. ``axo_linear``: per-tensor symmetric int8 quantization of activations and
-     weights, then the AxO matmul -- the Pallas kernel on TPU, its jnp
-     reference (identical math) otherwise -- and dequantization.
+     weights, then the AxO matmul -- the Pallas kernel (registry-tiled, padded
+     to blocks for arbitrary shapes), or its jnp reference (identical math) --
+     and dequantization.
+  3. ``deploy_axo``: walk a model's param tree and build an
+     :class:`AxODeployment` -- per-layer **cached** weight codes/scales and
+     pre-gathered ``G_r(W)`` factors for every attention q/k/v/o, MLP and MoE
+     expert projection (plus the LM head), so decode steps never requantize or
+     re-gather weights per token.  The deployment threads through
+     ``models.model.forward(axo=...)`` and the ``launch.steps`` builders.
 
 The bit-exact table path (exhaustive gather) stays available for validation;
 production uses the rank-R MXU path (DESIGN.md §3.2).
@@ -17,8 +24,9 @@ production uses the rank-R MXU path (DESIGN.md §3.2).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,10 +37,19 @@ from ..core.operator_model import (
     product_tables,
     spec_for,
 )
-from ..kernels.ops import axo_matmul
-from ..kernels.ref import ref_axo_matmul_lowrank
+from ..kernels import ops
+from ..kernels import ref as kref
+from ..kernels.axo_matmul_kernel import axo_matmul_pallas
+from ..kernels.tuning import tiles_for
 
-__all__ = ["AxOOperator", "quantize_tensor", "axo_linear"]
+__all__ = [
+    "AxOOperator",
+    "AxODeployment",
+    "AXO_LAYERS",
+    "quantize_tensor",
+    "axo_linear",
+    "deploy_axo",
+]
 
 
 @dataclass(frozen=True)
@@ -98,19 +115,230 @@ def axo_linear(
     w: jnp.ndarray,              # (K, N) float weights
     op: AxOOperator,
     use_kernel: bool = True,
+    ctx=None,                    # optional dse.context.ExecutionContext
 ) -> jnp.ndarray:
-    """y = x @ w evaluated through the approximate operator's arithmetic."""
+    """y = x @ w evaluated through the approximate operator's arithmetic.
+
+    The kernel path handles *arbitrary* shapes: the Pallas wrapper pads every
+    operand to the registry-selected block grid and slices the output (the old
+    ``% 128`` gate silently demoted decode-shaped inputs -- M=4, or any
+    head_dim < 128 -- to the slow reference path).  ``ctx`` may override the
+    impl via its kernel menu and supplies tuned tiles through ``tiles_for``.
+    """
     lead = x.shape[:-1]
     k = x.shape[-1]
+    n = w.shape[1]
     xq, sx = quantize_tensor(x.reshape(-1, k), op.n_bits)
     wq, sw = quantize_tensor(w, op.n_bits)
     f = jnp.asarray(op.f_table)
     g = jnp.asarray(op.g_table)
     sv = jnp.asarray(op.signed_vals, jnp.float32)
-    if use_kernel and all(
-        d % 128 == 0 for d in (xq.shape[0], k, w.shape[1])
-    ):
-        y = axo_matmul(xq, wq, f, g, sv)
+    impl = "pallas" if use_kernel else "xla"
+    if ctx is not None:
+        impl = ctx.resolve_impl("axo_matmul", impl)
+    if impl == "pallas":
+        tiles = tiles_for(ctx, "axo_matmul.pallas",
+                          m=xq.shape[0], k=k, n=n, rank=op.rank)
+        y = ops.axo_matmul(xq, wq, f, g, sv, **tiles)
     else:
-        y = ref_axo_matmul_lowrank(xq, wq, f, g, sv)
-    return (y * (sx * sw)).reshape(*lead, w.shape[1]).astype(x.dtype)
+        y = kref.ref_axo_matmul_lowrank(xq, wq, f, g, sv)
+    return (y * (sx * sw)).reshape(*lead, n).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model deployment
+# ---------------------------------------------------------------------------
+
+#: parts of the network ``deploy_axo`` can swap onto the approximate operator
+AXO_LAYERS = ("attn", "mlp", "moe", "head")
+
+
+@dataclass(frozen=True)
+class AxODeployment:
+    """DSE-selected operator deployed into every linear layer of a model.
+
+    Weights are quantized ONCE at deploy time: each entry caches the weight's
+    signed value matrix ``bv = signed_vals[Wq]`` (K, N), the pre-gathered
+    right factors ``gb = G_r(Wq)`` (R, K, N) and the weight scale -- decode
+    steps only quantize the (tiny) activation and gather its left factors.
+    Entries for stacked layers carry a leading ``repeats`` axis so they ride
+    through ``jax.lax.scan`` next to the params.
+
+    ``stages[str(si)][str(li)]`` mirrors ``params["stages"]`` with per-layer
+    ``{"mixer": ..., "mlp": ...}`` entry dicts; ``encoder`` mirrors the
+    optional encoder stage; ``head`` is a single (d, vocab) entry.
+    """
+
+    op: AxOOperator
+    impl: str                            # "pallas" | "xla"
+    layers: tuple
+    f_table: jnp.ndarray                 # (2^n, R) f32, device-resident
+    signed_vals: jnp.ndarray             # (2^n,) f32
+    stages: dict = field(default_factory=dict)
+    encoder: dict | None = None
+    head: dict | None = None
+    ctx: object | None = None            # ExecutionContext for tuned tiles
+    n_entries: int = 0
+
+    def apply(self, x: jnp.ndarray, entry: dict) -> jnp.ndarray:
+        """x @ W through the approximate operator, W cached in ``entry``."""
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        bv = entry["bv"]
+        n = bv.shape[-1]
+        xq, sx = quantize_tensor(
+            x.reshape(-1, k).astype(jnp.float32), self.op.n_bits
+        )
+        av = self.signed_vals[xq]                       # (M, K)
+        fa = jnp.moveaxis(self.f_table[xq], -1, 0)      # (R, M, K)
+        if self.impl == "pallas":
+            tiles = tiles_for(self.ctx, "axo_matmul.pallas",
+                              m=av.shape[0], k=k, n=n, rank=self.op.rank)
+            y = axo_matmul_pallas(
+                av, bv, fa, entry["gb"],
+                interpret=not ops.on_tpu(), **tiles,
+            )
+        else:
+            y = av @ bv + jnp.einsum("rmk,rkn->mn", fa, entry["gb"])
+        y = y * (sx * entry["scale"])
+        return y.reshape(*lead, n).astype(x.dtype)
+
+
+def deploy_axo(
+    params: dict,
+    op: AxOOperator,
+    cfg,
+    *,
+    layers: tuple = AXO_LAYERS,
+    impl: str = "pallas",
+    ctx=None,
+) -> AxODeployment:
+    """Build an :class:`AxODeployment` for ``params`` of a model ``cfg``.
+
+    Walks ``cfg.stages`` next to ``params["stages"]`` and prepares a cached
+    entry for every deployable projection:
+
+    * ``"attn"``  -- attention wq/wk/wv/wo (dense, no-cache, cross- and
+      self-halves of attn_x, gated xattn) and MLA wq_a/wq_b/wkv_a/wo.  MLA's
+      ``wkv_b`` stays exact: the absorbed form contracts its two halves
+      per-head against latents, not as a plain last-dim linear.  Mamba mixers
+      are out of scope (conv/SSM, no K->N linear on the hot path).
+    * ``"mlp"``   -- dense FFN w_gate/w_up/w_down, plus MoE *shared* experts.
+    * ``"moe"``   -- routed expert banks (per-expert entries; the router stays
+      exact -- approximating the argmax selector changes *which* experts run,
+      which is a routing decision, not arithmetic).
+    * ``"head"``  -- the unembedding (tied: embed.T).
+
+    ``impl="pallas"`` runs the padded registry-tiled kernel; ``"xla"`` runs
+    the jnp reference contraction (identical math, faster under CPU jit).
+    """
+    unknown = set(layers) - set(AXO_LAYERS)
+    if unknown:
+        raise ValueError(f"unknown AxO layer groups {sorted(unknown)}; "
+                         f"choose from {AXO_LAYERS}")
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"impl must be 'pallas' or 'xla', got {impl!r}")
+    f_dev = jnp.asarray(op.f_table, jnp.float32)
+    g_dev = jnp.asarray(op.g_table, jnp.float32)
+    sv_dev = jnp.asarray(op.signed_vals, jnp.float32)
+    count = [0]
+
+    def prep(w2d):
+        """(K, N) weight -> cached codes/values/factors entry."""
+        wq, sw = quantize_tensor(jnp.asarray(w2d, jnp.float32), op.n_bits)
+        count[0] += 1
+        return {
+            "bv": sv_dev[wq],                           # (K, N)
+            "gb": jnp.moveaxis(g_dev[wq], -1, 0),       # (R, K, N)
+            "scale": sw,
+        }
+
+    def prep_r(w, tail2=None):
+        """Stacked (repeats, ...) weight -> entry with a leading repeats axis."""
+        if tail2 is not None:
+            w = w.reshape(w.shape[0], *tail2)
+        return jax.vmap(prep)(w)
+
+    def prep_experts(w):
+        """(repeats, E, K, N) expert bank -> doubly-stacked entry."""
+        return jax.vmap(jax.vmap(prep))(w)
+
+    def attn_entries(mp):
+        rep, d, h, hd = mp["wq"].shape
+        g = mp["wk"].shape[2]
+        return {
+            "wq": prep_r(mp["wq"], (d, h * hd)),
+            "wk": prep_r(mp["wk"], (d, g * hd)),
+            "wv": prep_r(mp["wv"], (d, g * hd)),
+            "wo": prep_r(mp["wo"], (h * hd, mp["wo"].shape[3])),
+        }
+
+    def mla_entries(mp):
+        r_q, h, qd = mp["wq_b"].shape[1:]
+        _, v_hd, d = mp["wo"].shape[1:]
+        return {
+            "wq_a": prep_r(mp["wq_a"]),
+            "wq_b": prep_r(mp["wq_b"], (r_q, h * qd)),
+            "wkv_a": prep_r(mp["wkv_a"]),
+            "wo": prep_r(mp["wo"], (mp["wo"].shape[1] * v_hd, d)),
+        }
+
+    def mlp_entries(mp):
+        return {k: prep_r(mp[k])
+                for k in ("w_gate", "w_up", "w_down") if k in mp}
+
+    def layer_entries(mixer, mlp, lp):
+        ent = {}
+        if "attn" in layers:
+            if mixer in ("attn", "attn_nc", "xattn"):
+                ent["mixer"] = attn_entries(lp["mixer"])
+            elif mixer == "attn_x":
+                ent["mixer"] = {
+                    "self": attn_entries(lp["mixer"]["self"]),
+                    "cross": attn_entries(lp["mixer"]["cross"]),
+                }
+            elif mixer == "mla":
+                ent["mixer"] = mla_entries(lp["mixer"])
+        if mlp == "dense" and "mlp" in layers:
+            ent["mlp"] = mlp_entries(lp["mlp"])
+        elif mlp == "moe":
+            sub = {}
+            if "mlp" in layers and "shared" in lp["mlp"]:
+                sub["shared"] = mlp_entries(lp["mlp"]["shared"])
+            if "moe" in layers:
+                sub["experts"] = {
+                    k: prep_experts(lp["mlp"][k])
+                    for k in ("w_gate", "w_up", "w_down")
+                }
+            if sub:
+                ent["mlp"] = sub
+        return ent
+
+    stages = {}
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][str(si)]
+        stages[str(si)] = {
+            str(li): layer_entries(mixer, mlp, sp[str(li)])
+            for li, (mixer, mlp) in enumerate(stage.layers)
+        }
+
+    encoder = None
+    if getattr(cfg, "encoder", None) is not None and "encoder" in params:
+        ep = params["encoder"]["stage"]
+        encoder = {
+            str(li): layer_entries("attn_nc", "dense", ep[str(li)])
+            for li in range(len(ep))
+        }
+
+    head = None
+    if "head" in layers:
+        w = (params["embed"]["tok"].T if cfg.tie_embeddings
+             else params["embed"]["unembed"])
+        head = prep(w)
+
+    return AxODeployment(
+        op=op, impl=impl, layers=tuple(layers),
+        f_table=f_dev, signed_vals=sv_dev,
+        stages=stages, encoder=encoder, head=head,
+        ctx=ctx, n_entries=count[0],
+    )

@@ -7,6 +7,14 @@ diagonal are masked cheaply (their contribution underflows to zero through
 exp(-inf)); GQA maps each query head to its KV group via index_map, so KV
 blocks are fetched once per group -- never materialized per-head.
 
+Block shapes come from the kernel registry (spec ``"flash_attention.pallas"``,
+replacing the historical hard-coded ``bq=bk=128``); ``None`` resolves the
+bucket defaults, and the registry also supplies the ``pl.CostEstimate`` and
+compiler params.  Arbitrary sequence lengths (e.g. seq 192 with bq=128) are
+zero-padded to the block grid: padded *query* rows are computed and sliced
+off, padded *KV* positions are masked to -inf via the static true KV length
+(a zero-padded key would otherwise contribute exp(0) mass to the softmax).
+
 Oracle: kernels.ref.ref_flash_attention; parity swept over shapes/dtypes in
 tests/test_kernels.py (interpret=True executes this exact body on CPU).
 """
@@ -20,13 +28,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import registry
+
 __all__ = ["flash_attention_pallas"]
 
 NEG_INF = -1e30
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, scale: float, causal: bool, n_k: int, bq: int, bk: int):
+            *, scale: float, causal: bool, kv_len: int, n_k: int,
+            bq: int, bk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -41,10 +56,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     v = v_ref[0, 0]                        # (bk, hd)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    if causal:
-        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    if causal or kv_len % bk:
         k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        valid = k_pos < kv_len             # mask zero-padded KV positions
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            valid &= q_pos >= k_pos
+        s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -72,22 +90,38 @@ def flash_attention_pallas(
     v: jnp.ndarray,              # (B, G, Skv, hd)
     causal: bool = True,
     scale: float | None = None,
-    bq: int = 128,
-    bk: int = 128,
+    bq: int | None = None,
+    bk: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     b, h, sq, hd = q.shape
     g, skv = k.shape[1], k.shape[2]
     rep = h // g
     scale = float(1.0 / (hd ** 0.5)) if scale is None else scale
-    bq, bk = min(bq, sq), min(bk, skv)
-    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
-    n_k = skv // bk
+    spec = registry.get("flash_attention.pallas")
+    if bq is None or bk is None:
+        d = spec.default_tiles(spec.bucket(sq=sq, skv=skv, hd=hd))
+        bq = d["bq"] if bq is None else bq
+        bk = d["bk"] if bk is None else bk
+    # shrink blocks to the padded problem, never below the f32 min sublane/lane
+    bq = max(8, min(bq, _round_up(sq, 8)))
+    bk = max(128, min(bk, _round_up(skv, 128)))
+    sqp, skvp = _round_up(sq, bq), _round_up(skv, bk)
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        # padded KV positions are masked to -inf in-kernel via kv_len
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    n_k = skvp // bk
 
-    grid = (b, h, sq // bq, n_k)
-    return pl.pallas_call(
+    cost = spec.cost_estimate(b=b, h=h, sq=sqp, skv=skvp, hd=hd, causal=causal)
+    params = spec.compiler_params(bq=bq, bk=bk, hd=hd)
+    grid = (b, h, sqp // bq, n_k)
+    out = pl.pallas_call(
         functools.partial(
-            _kernel, scale=scale, causal=causal, n_k=n_k, bq=bq, bk=bk
+            _kernel, scale=scale, causal=causal, kv_len=skv, n_k=n_k,
+            bq=bq, bk=bk,
         ),
         grid=grid,
         in_specs=[
@@ -99,11 +133,14 @@ def flash_attention_pallas(
                          lambda bi, hi, qi, ki, rep=rep: (bi, hi // rep, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
+        cost_estimate=pl.CostEstimate(**cost),
+        compiler_params=pltpu.TPUCompilerParams(**params),
         interpret=interpret,
     )(q, k, v)
+    return out if sqp == sq else out[:, :, :sq]

@@ -27,12 +27,14 @@ def on_tpu() -> bool:
 
 
 def axo_matmul(a_codes, b_codes, f_table, g_table, signed_vals,
-               bm: int = 128, bn: int = 128, bk: int = 128,
-               interpret: bool | None = None):
+               bm: int | None = None, bn: int | None = None,
+               bk: int | None = None, interpret: bool | None = None):
     """Rank-R AxO matmul from integer CODES (table-index space).
 
     The code->value and code->factor lookups are tiny (2^n entries) and run in
-    XLA before the kernel; the kernel itself is pure MXU work.
+    XLA before the kernel; the kernel itself is pure MXU work.  ``None`` tiles
+    resolve the ``axo_matmul.pallas`` registry defaults; arbitrary (M, K, N)
+    are padded to the block grid inside the kernel wrapper.
     """
     interpret = (not on_tpu()) if interpret is None else interpret
     a_vals = signed_vals[a_codes].astype(jnp.float32)
@@ -45,7 +47,8 @@ def axo_matmul(a_codes, b_codes, f_table, g_table, signed_vals,
 
 
 def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
-                    bq: int = 128, bk: int = 128, interpret: bool | None = None):
+                    bq: int | None = None, bk: int | None = None,
+                    interpret: bool | None = None):
     interpret = (not on_tpu()) if interpret is None else interpret
     return flash_attention_pallas(
         q, k, v, causal=causal, scale=scale, bq=bq, bk=bk, interpret=interpret

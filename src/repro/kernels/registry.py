@@ -50,7 +50,7 @@ __all__ = [
     "ENGINES",
 ]
 
-ENGINES = ("fastchar", "fastapp", "fastmoo")
+ENGINES = ("fastchar", "fastapp", "fastmoo", "axo_matmul", "flash_attention")
 
 
 def _pow2_bucket(x: int, cap: int = 1 << 14) -> int:
@@ -93,6 +93,7 @@ class KernelSpec:
     constraint: Callable | None = None          # (bucket, tiles) -> bool
     cost_fn: Callable | None = None             # (shape kwargs) -> dict
     params_fn: Callable | None = None           # (shape kwargs) -> dict
+    tol: float = 1e-6                           # rtol/atol for "close" parity
     description: str = ""
 
     # -- lazy references ------------------------------------------------------
@@ -315,6 +316,87 @@ def _app_params(*, m: int, k_tile: int, n: int, a: int, **_) -> dict:
     }
 
 
+def _axo_bucket(*, m: int, k: int, n: int, rank: int):
+    return (
+        _pow2_bucket(m),
+        _pow2_bucket(k),
+        _pow2_bucket(n),
+        _pow2_bucket(rank, cap=64),
+    )
+
+
+def _axo_constraint(bucket, tiles) -> bool:
+    m, k, n, rank = bucket
+    bm, bn, bk = tiles["bm"], tiles["bn"], tiles["bk"]
+    # blocks never exceed the padded problem (the kernel pads M to sublane
+    # multiples of 8 and K/N to lane multiples of 128, then to the block)
+    if bm > max(8, m) or bn > max(128, n) or bk > max(128, k):
+        return False
+    # VMEM fit: a/b value blocks + the rank-stacked factor blocks + f32
+    # accumulator scratch and output block
+    return 4 * ((1 + rank) * (bm * bk + bk * bn) + 2 * bm * bn) < (12 << 20)
+
+
+def _axo_defaults(bucket) -> dict:
+    m, _, _, _ = bucket
+    return {"bm": min(128, max(8, m)), "bn": 128, "bk": 128}
+
+
+def _axo_cost(*, m: int, k: int, n: int, rank: int, **_) -> dict:
+    return {
+        # the exact product plus one (bm, bk) x (bk, bn) matmul per rank term
+        "flops": 2 * m * n * k * (1 + rank),
+        "bytes_accessed": 4 * ((1 + rank) * (m * k + k * n) + m * n),
+        "transcendentals": 0,
+    }
+
+
+def _axo_params(*, bm: int, bn: int, bk: int, rank: int, **_) -> dict:
+    block_bytes = 4 * ((1 + rank) * (bm * bk + bk * bn) + 2 * bm * bn)
+    return {
+        # the K axis accumulates into a revisited output block: sequential
+        "dimension_semantics": ("parallel", "parallel", "arbitrary"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
+def _flash_bucket(*, sq: int, skv: int, hd: int):
+    return (_pow2_bucket(sq), _pow2_bucket(skv), _pow2_bucket(hd, cap=256))
+
+
+def _flash_constraint(bucket, tiles) -> bool:
+    sq, skv, hd = bucket
+    bq, bk = tiles["bq"], tiles["bk"]
+    if bq > max(8, sq) or bk > max(128, skv):
+        return False
+    # q/acc/o blocks + k/v blocks + the (bq, bk) score matrix and m/l rows
+    return 4 * (3 * bq * hd + 2 * bk * hd + 2 * bq * bk + 2 * bq) < (12 << 20)
+
+
+def _flash_defaults(bucket) -> dict:
+    sq, _, _ = bucket
+    return {"bq": min(128, max(8, sq)), "bk": 128}
+
+
+def _flash_cost(*, b: int, h: int, sq: int, skv: int, hd: int,
+                causal: bool = True, **_) -> dict:
+    pairs = b * h * sq * skv // (2 if causal else 1)
+    return {
+        "flops": 4 * pairs * hd,  # qk^T and pv, 2 flops/MAC each
+        "bytes_accessed": 4 * (2 * b * h * sq * hd + 2 * b * h * skv * hd),
+        "transcendentals": pairs,  # one exp per unmasked score
+    }
+
+
+def _flash_params(*, bq: int, bk: int, hd: int, **_) -> dict:
+    block_bytes = 4 * (3 * bq * hd + 2 * bk * hd + 2 * bq * bk + 2 * bq)
+    return {
+        # KV blocks revisit the q block's scratch (online softmax): sequential
+        "dimension_semantics": ("parallel", "parallel", "parallel", "arbitrary"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
 def _moo_bucket(*, p: int, n_obj: int):
     return (_pow2_bucket(p), int(n_obj))
 
@@ -423,6 +505,73 @@ register(KernelSpec(
     cost_fn=_app_cost,
     params_fn=_app_params,
     description="K-tiled batched table-GEMV, per-config table VMEM-resident",
+))
+
+# -- axo_matmul: AxO serving matmul (exact product + rank-R error factors) --
+
+register(KernelSpec(
+    name="axo_matmul.xla",
+    engine="axo_matmul",
+    impl="xla",
+    fn_ref="repro.kernels.tuning:_run_axo",
+    oracle_ref="repro.kernels.tuning:_oracle_axo",
+    tunables=(),
+    bucket_fn=_axo_bucket,
+    tol=1e-5,
+    description="ref_axo_matmul_lowrank: einsum exact product + rank terms",
+))
+
+register(KernelSpec(
+    name="axo_matmul.pallas",
+    engine="axo_matmul",
+    impl="pallas",
+    fn_ref="repro.kernels.tuning:_run_axo",
+    oracle_ref="repro.kernels.tuning:_oracle_axo",
+    tunables=(
+        ("bm", (8, 16, 32, 64, 128, 256)),
+        ("bn", (128, 256)),
+        ("bk", (128, 256)),
+    ),
+    defaults_fn=_axo_defaults,
+    bucket_fn=_axo_bucket,
+    constraint=_axo_constraint,
+    cost_fn=_axo_cost,
+    params_fn=_axo_params,
+    tol=1e-5,
+    description="K-blocked AxO matmul, rank terms unrolled in VMEM scratch",
+))
+
+# -- flash_attention: serving attention -------------------------------------
+
+register(KernelSpec(
+    name="flash_attention.xla",
+    engine="flash_attention",
+    impl="xla",
+    fn_ref="repro.kernels.tuning:_run_flash",
+    oracle_ref="repro.kernels.tuning:_oracle_flash",
+    tunables=(),
+    bucket_fn=_flash_bucket,
+    tol=5e-6,
+    description="ref_flash_attention: materialized-score softmax attention",
+))
+
+register(KernelSpec(
+    name="flash_attention.pallas",
+    engine="flash_attention",
+    impl="pallas",
+    fn_ref="repro.kernels.tuning:_run_flash",
+    oracle_ref="repro.kernels.tuning:_oracle_flash",
+    tunables=(
+        ("bq", (8, 16, 32, 64, 128, 256)),
+        ("bk", (128, 256, 512)),
+    ),
+    defaults_fn=_flash_defaults,
+    bucket_fn=_flash_bucket,
+    constraint=_flash_constraint,
+    cost_fn=_flash_cost,
+    params_fn=_flash_params,
+    tol=5e-6,
+    description="online-softmax GQA attention, KV-blocked with m/l scratch",
 ))
 
 # -- fastmoo: dominance counts ----------------------------------------------

@@ -30,6 +30,7 @@ their block shapes through it instead of module constants.
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -71,6 +72,9 @@ _MAX_CHAR_D = {"pallas": 64, "xla": 256}
 _MAX_APP_D = {"pallas": 8, "xla": 64, "gemm": 8}
 _MAX_APP_MKN = (64, 256, 64)
 _MAX_MOO_P = 128
+_MAX_AXO_MKN = (32, 192, 160)
+_MAX_AXO_RANK = 8
+_MAX_FLASH_SHD = (64, 192, 64)
 _TIMING_REPS = 3
 
 
@@ -229,6 +233,112 @@ def _oracle_fastapp(spec_reg, bucket):
     return ((out,), ())
 
 
+def _awkward(x: int, cap: int) -> int:
+    """Bucket-shaped but deliberately non-divisible case size (pad coverage)."""
+    x = min(x, cap)
+    return x - x // 8 if x > 8 else x
+
+
+@functools.lru_cache(maxsize=None)
+def _axo_factors(rank):
+    from repro.core.operator_model import error_tables, spec_for
+
+    spec = spec_for(8)
+    rng = np.random.default_rng(11)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    err = error_tables(spec, cfg[None])[0].astype(np.float64)
+    u, s, vt = np.linalg.svd(err)
+    f = (u[:, :rank] * s[:rank]).astype(np.float32)
+    g = vt[:rank].T.astype(np.float32)
+    return spec, f, g
+
+
+def _axo_case(bucket):
+    m, k, n, rank = bucket
+    m, k, n = (_awkward(x, cap) for x, cap in zip((m, k, n), _MAX_AXO_MKN))
+    rank = min(rank, _MAX_AXO_RANK)
+    spec, f, g = _axo_factors(rank)
+    rng = np.random.default_rng(m + 3 * k + 7 * n + rank)
+    a = rng.integers(0, spec.n_inputs, (m, k)).astype(np.int32)
+    b = rng.integers(0, spec.n_inputs, (k, n)).astype(np.int32)
+    # outputs are O(k * qmax^2); normalize so the spec tol gates relative error
+    scale = float(k) * 127.0 * 127.0
+    return spec, f, g, a, b, scale
+
+
+def _run_axo(spec_reg, bucket, tiles):
+    import jax.numpy as jnp
+
+    spec, f, g, a, b, scale = _axo_case(bucket)
+    sv = jnp.asarray(spec.operand_values, jnp.float32)
+    args = (jnp.asarray(a), jnp.asarray(b), jnp.asarray(f), jnp.asarray(g), sv)
+    if spec_reg.impl == "pallas":
+        from .ops import axo_matmul
+
+        out = axo_matmul(*args, **tiles)
+    else:
+        from .ref import ref_axo_matmul_lowrank
+
+        out = ref_axo_matmul_lowrank(*args)
+    return ((), (np.asarray(out, np.float64) / scale,))
+
+
+def _oracle_axo(spec_reg, bucket):
+    spec, f, g, a, b, scale = _axo_case(bucket)
+    sv = np.asarray(spec.operand_values, np.float64)
+    out = sv[a] @ sv[b]
+    out += np.einsum("mkr,knr->mn", f.astype(np.float64)[a],
+                     g.astype(np.float64)[b])
+    return ((), (out / scale,))
+
+
+def _flash_case(bucket):
+    sq, skv, hd = bucket
+    sq, skv, hd = (_awkward(x, cap)
+                   for x, cap in zip((sq, skv, hd), _MAX_FLASH_SHD))
+    causal = sq == skv  # causal masking assumes aligned q/k positions
+    b, h, g = 1, 2, 1
+    rng = np.random.default_rng(sq + 3 * skv + 7 * hd)
+    q = rng.standard_normal((b, h, sq, hd)).astype(np.float32)
+    k = rng.standard_normal((b, g, skv, hd)).astype(np.float32)
+    v = rng.standard_normal((b, g, skv, hd)).astype(np.float32)
+    return q, k, v, causal
+
+
+def _run_flash(spec_reg, bucket, tiles):
+    import jax.numpy as jnp
+
+    q, k, v, causal = _flash_case(bucket)
+    args = (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    if spec_reg.impl == "pallas":
+        from .ops import flash_attention
+
+        out = flash_attention(*args, causal=causal, **tiles)
+    else:
+        from .ref import ref_flash_attention
+
+        out = ref_flash_attention(*args, causal=causal)
+    return ((), (np.asarray(out, np.float64),))
+
+
+def _oracle_flash(spec_reg, bucket):
+    q, k, v, causal = _flash_case(bucket)
+    qf, kf, vf = (x.astype(np.float64) for x in (q, k, v))
+    rep = qf.shape[1] // kf.shape[1]
+    kf = np.repeat(kf, rep, axis=1)
+    vf = np.repeat(vf, rep, axis=1)
+    sq, hd = qf.shape[2], qf.shape[3]
+    s = np.einsum("bhqd,bhkd->bhqk", qf, kf) / np.sqrt(hd)
+    if causal:
+        skv = kf.shape[2]
+        s = np.where(np.arange(sq)[:, None] >= np.arange(skv)[None, :],
+                     s, -np.inf)
+    s -= s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p /= p.sum(-1, keepdims=True)
+    return ((), (np.einsum("bhqk,bhkd->bhqd", p, vf),))
+
+
 def _moo_case(bucket):
     p, n_obj = bucket
     p = min(p, _MAX_MOO_P)
@@ -294,14 +404,16 @@ def oracle_case(spec: registry.KernelSpec, bucket) -> tuple:
 
 
 def parity_ok(spec: registry.KernelSpec, bucket, tiles, oracle=None) -> bool:
-    """Candidate parity gate: integer channels bit-identical, f32 ~1e-6."""
+    """Candidate parity gate: integer channels bit-identical, float channels
+    within the spec's ``tol`` (rtol and atol)."""
     exact_o, close_o = oracle if oracle is not None else oracle_case(spec, bucket)
     exact_r, close_r = run_case(spec, bucket, tiles)
     for r, o in zip(exact_r, exact_o):
         if not np.array_equal(np.asarray(r), np.asarray(o)):
             return False
     for r, o in zip(close_r, close_o):
-        if not np.allclose(np.asarray(r), np.asarray(o), rtol=1e-6, atol=1e-6):
+        if not np.allclose(np.asarray(r), np.asarray(o),
+                           rtol=spec.tol, atol=spec.tol):
             return False
     return True
 

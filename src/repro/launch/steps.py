@@ -138,13 +138,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     return init_params(cache_spec(cfg, batch, max_seq), dtype=dtype)  # all zeros
 
 
-def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, max_seq: int):
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, max_seq: int,
+                      axo=None):
     """(params, tokens[, frontend embeds]) -> (last-position logits, cache).
 
     ``frontend`` is the stubbed modality input -- frame embeddings for the
     enc-dec family, patch embeddings for the VLM family (cfg decides which).
     The cache is created inside the step (zeros) at capacity ``max_seq`` and
     filled by the prefill pass -- one compiled program per (batch, capacity).
+
+    ``axo`` (an ``axo.deploy.AxODeployment``) is closed over: its cached weight
+    codes/factors become jit constants, so the compiled step serves every token
+    through the approximate operator with no per-call requantization.
     """
 
     def prefill_step(params, tokens, frontend=None):
@@ -155,23 +160,25 @@ def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, max_seq: int):
         x, _, cache = forward(
             params, cfg, rules, tokens, mode="prefill",
             cache=cache, cache_index=jnp.zeros((), jnp.int32),
-            enc_embeds=enc, img_embeds=img,
+            enc_embeds=enc, img_embeds=img, axo=axo,
         )
-        logits = logits_fn(params, cfg, rules, x[:, -1:])
+        logits = logits_fn(params, cfg, rules, x[:, -1:], axo=axo)
         return logits, cache
 
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, rules: ShardingRules):
-    """(params, cache, tokens (B,1), index ()) -> (logits (B,1,V), new cache)."""
+def make_decode_step(cfg: ModelConfig, rules: ShardingRules, axo=None):
+    """(params, cache, tokens (B,1), index ()) -> (logits (B,1,V), new cache).
+
+    ``axo`` as in :func:`make_prefill_step`."""
 
     def decode_step(params, cache, tokens, index):
         x, _, cache = forward(
             params, cfg, rules, tokens, mode="decode",
-            cache=cache, cache_index=index,
+            cache=cache, cache_index=index, axo=axo,
         )
-        logits = logits_fn(params, cfg, rules, x)
+        logits = logits_fn(params, cfg, rules, x, axo=axo)
         return logits, cache
 
     return decode_step

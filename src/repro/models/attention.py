@@ -300,11 +300,26 @@ def attn_apply(
     cache: dict | None = None,            # {'k','v'}: (B, Smax, G, hd)
     cache_index: jnp.ndarray | None = None,
     q_start: int | None = None,           # static row-0 position (causal skip)
+    axo=None,                             # (AxODeployment, layer mixer entries)
 ):
-    """Returns (out, new_cache)."""
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
-    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    """Returns (out, new_cache).
+
+    ``axo`` routes the q/k/v/o projections through the approximate operator's
+    cached weight factors (attention *math* -- scores/softmax -- stays exact;
+    AxO replaces multiplier arrays, i.e. the matmuls).
+    """
+    if axo is not None and "wq" in axo[1]:
+        dep, ent = axo
+        b_, s_ = x.shape[:2]
+        h_, hd_ = p["wq"].shape[1], p["wq"].shape[2]
+        g_ = p["wk"].shape[1]
+        q = dep.apply(x, ent["wq"]).reshape(b_, s_, h_, hd_)
+        k = dep.apply(x, ent["wk"]).reshape(b_, s_, g_, hd_)
+        v = dep.apply(x, ent["wv"]).reshape(b_, s_, g_, hd_)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+        v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
     q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
     k = constrain(k, rules, "batch", "seq", "kv_heads", "head_dim")
 
@@ -334,7 +349,11 @@ def attn_apply(
             unroll=cfg.unroll_loops,
             q_start=q_start if cfg.causal_block_skip else None,
         )
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if axo is not None and "wo" in axo[1]:
+        dep, ent = axo
+        out = dep.apply(out.reshape(*out.shape[:2], -1), ent["wo"])
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return constrain(out, rules, "batch", "seq", "embed"), new_cache
 
 
@@ -371,23 +390,39 @@ def mla_apply(
     cache: dict | None = None,            # {'ckv': (B,Smax,r), 'kpe': (B,Smax,rope)}
     cache_index: jnp.ndarray | None = None,
     q_start: int | None = None,
+    axo=None,                             # (AxODeployment, layer mixer entries)
 ):
     """Absorbed-form MLA.  The latent c_kv (+ shared rope key) is the entire KV:
     a single shared "KV head" of width r + rope; q_nope is absorbed through the
     K-half of wkv_b so scores live in latent space, and the attention output (in
     latent space) is re-projected through the V-half.  Softmax scale is that of
-    the *unabsorbed* head width (nope + rope)."""
+    the *unabsorbed* head width (nope + rope).
+
+    With ``axo``, the plain last-dim linears (wq_a, wq_b, wkv_a, wo) run on the
+    approximate operator; ``wkv_b`` stays exact -- its absorbed halves contract
+    per-head against latents, not as a (K, N) linear.
+    """
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
+    a_ent = axo[1] if axo is not None else {}
 
-    q = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
-    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])
+    def lin(name, fn_exact, v):
+        if name in a_ent:
+            return axo[0].apply(v, a_ent[name])
+        return fn_exact(v)
+
+    q = rmsnorm(lin("wq_a", lambda v: v @ p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+    if "wq_b" in a_ent:
+        qd = m.nope_head_dim + m.rope_head_dim
+        q = axo[0].apply(q, a_ent["wq_b"]).reshape(b, s, h, qd)
+    else:
+        q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])
     q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
     q_nope = q[..., : m.nope_head_dim]
     q_pe = q[..., m.nope_head_dim :]
 
-    kv = x @ p["wkv_a"]
+    kv = lin("wkv_a", lambda v: v @ p["wkv_a"], x)
     ckv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     kpe = kv[..., m.kv_lora_rank :][:, :, None, :]   # (B,S,1,rope) shared head
 
@@ -432,7 +467,10 @@ def mla_apply(
     # ctx: (B,S,H,r) in latent space; re-project through wkv_b's V half.
     wv_half = p["wkv_b"][..., m.nope_head_dim :]          # (r, H, v_hd)
     out = jnp.einsum("bshr,rhk->bshk", ctx, wv_half)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "wo" in a_ent:
+        out = axo[0].apply(out.reshape(b, s, -1), a_ent["wo"])
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return constrain(out, rules, "batch", "seq", "embed"), new_cache
 
 
@@ -452,10 +490,17 @@ def xattn_spec(cfg: ModelConfig) -> dict:
     }
 
 
-def xattn_kv(p: dict, enc: jnp.ndarray):
+def xattn_kv(p: dict, enc: jnp.ndarray, axo=None):
     """Precompute cross K/V from encoder/image states (cached for decode)."""
-    k = jnp.einsum("bsd,dgk->bsgk", enc, p["wk"])
-    v = jnp.einsum("bsd,dgk->bsgk", enc, p["wv"])
+    if axo is not None and "wk" in axo[1]:
+        dep, ent = axo
+        b_, s_ = enc.shape[:2]
+        g_, hd_ = p["wk"].shape[1], p["wk"].shape[2]
+        k = dep.apply(enc, ent["wk"]).reshape(b_, s_, g_, hd_)
+        v = dep.apply(enc, ent["wv"]).reshape(b_, s_, g_, hd_)
+    else:
+        k = jnp.einsum("bsd,dgk->bsgk", enc, p["wk"])
+        v = jnp.einsum("bsd,dgk->bsgk", enc, p["wv"])
     return k, v
 
 
@@ -467,8 +512,15 @@ def xattn_apply(
     *,
     kv: tuple[jnp.ndarray, jnp.ndarray],   # precomputed (k, v) from encoder states
     gated: bool = False,
+    axo=None,                              # (AxODeployment, layer mixer entries)
 ):
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if axo is not None and "wq" in axo[1]:
+        dep, ent = axo
+        b_, s_ = x.shape[:2]
+        h_, hd_ = p["wq"].shape[1], p["wq"].shape[2]
+        q = dep.apply(x, ent["wq"]).reshape(b_, s_, h_, hd_)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
     k, v = kv
     if x.shape[1] <= 4:
@@ -485,7 +537,11 @@ def xattn_apply(
             q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
             unroll=cfg.unroll_loops,
         )
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if axo is not None and "wo" in axo[1]:
+        dep, ent = axo
+        out = dep.apply(out.reshape(*out.shape[:2], -1), ent["wo"])
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     if gated:
         out = jnp.tanh(p["gate"].astype(out.dtype)) * out
     return constrain(out, rules, "batch", "seq", "embed")

@@ -72,12 +72,21 @@ def mlp_spec(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+def mlp_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, axo=None) -> jnp.ndarray:
+    """Dense FFN.  ``axo`` = (AxODeployment, entries) runs each projection on
+    the approximate operator's cached weight factors (activations stay exact)."""
+    ent = axo[1] if axo is not None else {}
+
+    def lin(name, v):
+        if name in ent:
+            return axo[0].apply(v, ent[name])
+        return v @ p[name]
+
     if cfg.act == "swiglu":
-        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = jax.nn.silu(lin("w_gate", x)) * lin("w_up", x)
     else:
-        h = jax.nn.gelu(x @ p["w_up"])
-    return h @ p["w_down"]
+        h = jax.nn.gelu(lin("w_up", x))
+    return lin("w_down", h)
 
 
 def embed_spec(cfg: ModelConfig) -> dict:

@@ -205,11 +205,28 @@ def _apply_layer(
     rules: ShardingRules,
     ctx: dict,
     cache: dict | None,
+    axo_layer: dict | None = None,
 ):
-    """Pre-norm residual layer.  Returns (x, aux_delta, new_cache)."""
+    """Pre-norm residual layer.  Returns (x, aux_delta, new_cache).
+
+    ``axo_layer`` is this layer's entry dict from an ``AxODeployment``
+    (``ctx["axo"]``): when present, the named projections run through the
+    approximate operator's cached weight factors instead of exact matmuls.
+    """
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache = None
     use_rope = cfg.pos_encoding == "rope"
+    dep = ctx.get("axo")
+
+    def ax(part, sub=None):
+        if dep is None or not axo_layer or part not in axo_layer:
+            return None
+        ent = axo_layer[part]
+        if sub is not None:
+            ent = ent.get(sub) if isinstance(ent, dict) else None
+            if ent is None:
+                return None
+        return (dep, ent)
 
     if mixer in ("attn", "attn_nc"):
         attn_cache = None
@@ -220,7 +237,7 @@ def _apply_layer(
             positions=ctx["positions"], causal=(mixer == "attn"),
             use_rope=use_rope and mixer == "attn",
             cache=attn_cache, cache_index=ctx["cache_index"],
-            q_start=ctx["q_start"],
+            q_start=ctx["q_start"], axo=ax("mixer"),
         )
         if nc is not None:
             new_cache = nc
@@ -232,15 +249,17 @@ def _apply_layer(
             p["mixer"]["self"], h, cfg, rules,
             positions=ctx["positions"], causal=True, use_rope=use_rope,
             cache=self_cache, cache_index=ctx["cache_index"],
-            q_start=ctx["q_start"],
+            q_start=ctx["q_start"], axo=ax("mixer", "self"),
         )
         x = x + out
         h = rmsnorm(x, p["mixer"]["norm_x"], cfg.norm_eps)
         if ctx["enc_out"] is not None:
-            kv = xattn_kv(p["mixer"]["cross"], ctx["enc_out"])
+            kv = xattn_kv(p["mixer"]["cross"], ctx["enc_out"],
+                          axo=ax("mixer", "cross"))
         else:
             kv = (cache["xk"], cache["xv"])
-        out = xattn_apply(p["mixer"]["cross"], h, cfg, rules, kv=kv)
+        out = xattn_apply(p["mixer"]["cross"], h, cfg, rules, kv=kv,
+                          axo=ax("mixer", "cross"))
         if nc is not None:
             new_cache = dict(nc)
             if ctx["enc_out"] is not None:
@@ -250,10 +269,11 @@ def _apply_layer(
                 new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
     elif mixer == "xattn":
         if ctx["enc_out"] is not None:
-            kv = xattn_kv(p["mixer"], ctx["enc_out"])
+            kv = xattn_kv(p["mixer"], ctx["enc_out"], axo=ax("mixer"))
         else:
             kv = (cache["xk"], cache["xv"])
-        out = xattn_apply(p["mixer"], h, cfg, rules, kv=kv, gated=True)
+        out = xattn_apply(p["mixer"], h, cfg, rules, kv=kv, gated=True,
+                          axo=ax("mixer"))
         if cache is not None:
             if ctx["enc_out"] is not None:
                 new_cache = {"xk": kv[0].astype(cache["xk"].dtype),
@@ -267,7 +287,7 @@ def _apply_layer(
         out, nc = mla_apply(
             p["mixer"], h, cfg, rules,
             positions=ctx["positions"], cache=mla_cache, cache_index=ctx["cache_index"],
-            q_start=ctx["q_start"],
+            q_start=ctx["q_start"], axo=ax("mixer"),
         )
         if nc is not None:
             new_cache = nc
@@ -288,9 +308,9 @@ def _apply_layer(
     if mlp != "none":
         h = rmsnorm(x, p["norm2"], cfg.norm_eps)
         if mlp == "moe":
-            out, aux = moe_apply(p["mlp"], h, cfg, rules)
+            out, aux = moe_apply(p["mlp"], h, cfg, rules, axo=ax("mlp"))
         else:
-            out = mlp_apply(p["mlp"], h, cfg)
+            out = mlp_apply(p["mlp"], h, cfg, axo=ax("mlp"))
         x = x + out
     x = constrain(x, rules, "batch", "res_seq", "embed")
     return x, aux, new_cache
@@ -304,18 +324,26 @@ def _run_stage(
     rules: ShardingRules,
     ctx: dict,
     cache: dict | None,
+    axo_stage: dict | None = None,
 ):
-    """Scan the super-block over ``repeats``.  Returns (x, aux, new_cache)."""
+    """Scan the super-block over ``repeats``.  Returns (x, aux, new_cache).
+
+    ``axo_stage`` (AxODeployment entries, stacked over ``repeats`` like the
+    params) rides through the scan as a third xs element.
+    """
     layers = stage.layers
 
     def block(carry, xs):
         x, aux = carry
-        p_blk, c_blk = xs
+        p_blk, c_blk, a_blk = xs
         new_c = {}
         for i, (mixer, mlp) in enumerate(layers):
             li = str(i)
             lc = c_blk.get(li) if c_blk else None
-            x, da, nc = _apply_layer(mixer, mlp, p_blk[li], x, cfg, rules, ctx, lc)
+            la = a_blk.get(li) if a_blk else None
+            x, da, nc = _apply_layer(
+                mixer, mlp, p_blk[li], x, cfg, rules, ctx, lc, axo_layer=la
+            )
             aux = aux + da
             if nc is not None:
                 new_c[li] = nc
@@ -323,7 +351,7 @@ def _run_stage(
 
     body = jax.checkpoint(block) if (cfg.remat and ctx["mode"] == "train") else block
     carry0 = (x, jnp.zeros((), jnp.float32))
-    xs = (stage_params, cache if cache else {})
+    xs = (stage_params, cache if cache else {}, axo_stage if axo_stage else {})
     if cfg.unroll_loops:
         # Cost-probe mode: Python loop so cost_analysis counts every repeat.
         carry = carry0
@@ -346,7 +374,7 @@ def _run_stage(
 
 
 def _encode(params: dict, cfg: ModelConfig, rules: ShardingRules,
-            enc_embeds: jnp.ndarray, mode: str):
+            enc_embeds: jnp.ndarray, mode: str, axo=None):
     """Whisper-style encoder over precomputed frame embeddings (stub frontend).
 
     ``mode`` must follow the outer pass: in training the encoder layers remat
@@ -364,8 +392,12 @@ def _encode(params: dict, cfg: ModelConfig, rules: ShardingRules,
         "cache_index": None,
         "enc_out": None,
         "q_start": 0,
+        "axo": axo,
     }
-    x, _, _ = _run_stage(params["encoder"]["stage"], enc_stage, x, cfg, rules, ctx, None)
+    x, _, _ = _run_stage(
+        params["encoder"]["stage"], enc_stage, x, cfg, rules, ctx, None,
+        axo_stage=axo.encoder if axo is not None else None,
+    )
     return rmsnorm(x, params["encoder"]["norm_f"], cfg.norm_eps)
 
 
@@ -380,6 +412,7 @@ def forward(
     cache_index: jnp.ndarray | None = None,
     enc_embeds: jnp.ndarray | None = None,   # (B, n_ctx, d) whisper stub frontend
     img_embeds: jnp.ndarray | None = None,   # (B, n_img, d) VLM stub frontend
+    axo=None,                                # optional axo.deploy.AxODeployment
 ):
     """Returns (hidden (B,S,d) or last-step hidden for prefill, aux, new_cache)."""
     b, s = tokens.shape
@@ -394,7 +427,7 @@ def forward(
 
     enc_out = None
     if cfg.encoder is not None and enc_embeds is not None:
-        enc_out = _encode(params, cfg, rules, enc_embeds, mode)
+        enc_out = _encode(params, cfg, rules, enc_embeds, mode, axo)
     elif cfg.n_img_tokens and img_embeds is not None:
         enc_out = img_embeds
 
@@ -406,13 +439,18 @@ def forward(
         # static position of query row 0: known (0) for train and from-scratch
         # prefill; unknown for decode (direct path anyway)
         "q_start": 0 if mode in ("train", "prefill") else None,
+        "axo": axo,
     }
 
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
     for si, stage in enumerate(cfg.stages):
         sc = cache.get(str(si)) if cache is not None else None
-        x, da, nc = _run_stage(params["stages"][str(si)], stage, x, cfg, rules, ctx, sc)
+        sa = axo.stages.get(str(si)) if axo is not None else None
+        x, da, nc = _run_stage(
+            params["stages"][str(si)], stage, x, cfg, rules, ctx, sc,
+            axo_stage=sa,
+        )
         aux = aux + da
         if new_cache is not None:
             new_cache[str(si)] = nc if nc is not None else {}
@@ -421,16 +459,19 @@ def forward(
     return x, aux, new_cache
 
 
-def _unembed(params: dict, cfg: ModelConfig, rules: ShardingRules, x: jnp.ndarray):
-    if cfg.tie_embeddings:
+def _unembed(params: dict, cfg: ModelConfig, rules: ShardingRules, x: jnp.ndarray,
+             axo=None):
+    if axo is not None and axo.head is not None:
+        logits = axo.apply(x, axo.head)
+    elif cfg.tie_embeddings:
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"])
     else:
         logits = x @ params["embed"]["unembed"]
     return constrain(logits, rules, "batch", "res_seq", "vocab")
 
 
-def logits_fn(params, cfg, rules, x):
-    return _unembed(params, cfg, rules, x)
+def logits_fn(params, cfg, rules, x, axo=None):
+    return _unembed(params, cfg, rules, x, axo=axo)
 
 
 def _masked_ce(logits: jnp.ndarray, labels: jnp.ndarray):

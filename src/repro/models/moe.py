@@ -68,12 +68,16 @@ def _dispatch_compute(
     w_down: jnp.ndarray,
     e0: jnp.ndarray | int,   # first global expert id owned locally
     cap: int,
+    axo=None,                # (AxODeployment, expert entry dict) or None
 ) -> jnp.ndarray:
     """Sort-based dispatch -> expert FFN -> weighted combine for local experts.
 
     Entries routed to non-local experts get the sentinel bucket ``E_loc`` and are
     dropped by the capacity scatter.  Returns the (T, d) partial output covering
     only locally-owned expert contributions.
+
+    ``axo`` runs each expert's FFN on the approximate operator (a static Python
+    loop over the E_loc capacity buffers -- dispatch/combine stay exact).
     """
     t, d = x.shape
     e_loc = w_gate.shape[0]
@@ -92,10 +96,21 @@ def _dispatch_compute(
     buf = jnp.zeros((e_loc, cap, d), x.dtype)
     buf = buf.at[sorted_e, pos].set(x[tok], mode="drop")   # sentinel/over-cap dropped
 
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
-        "ecd,edf->ecf", buf, w_up
-    )
-    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    if axo is None:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+            "ecd,edf->ecf", buf, w_up
+        )
+        y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    else:
+        dep, ent = axo
+        ys = []
+        for ei in range(e_loc):
+            sel = lambda sub: {kk: vv[ei] for kk, vv in sub.items()}
+            he = jax.nn.silu(dep.apply(buf[ei], sel(ent["w_gate"]))) * dep.apply(
+                buf[ei], sel(ent["w_up"])
+            )
+            ys.append(dep.apply(he, sel(ent["w_down"])))
+        y = jnp.stack(ys).astype(buf.dtype)
 
     kept = (sorted_e < e_loc) & (pos >= 0) & (pos < cap)
     y_tok = (
@@ -181,8 +196,15 @@ def moe_apply(
     x: jnp.ndarray,                 # (B, S, d)
     cfg: ModelConfig,
     rules: ShardingRules,
+    axo=None,                       # (AxODeployment, layer mlp entries) or None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (out (B, S, d), router aux loss scalar)."""
+    """Returns (out (B, S, d), router aux loss scalar).
+
+    ``axo`` swaps the expert FFNs (and the shared experts) onto the approximate
+    operator.  The router stays exact -- it picks *which* experts run, a routing
+    decision rather than arithmetic -- and AxO serving targets the single-device
+    reference path (EP/weight-stationary shard_map paths keep exact experts).
+    """
     e = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -225,7 +247,15 @@ def moe_apply(
         and d % data_n == 0
     )
 
-    if decode_ws:
+    axo_experts = axo is not None and "experts" in axo[1]
+    if axo_experts:
+        cap = moe_capacity(t, cfg)
+        out = _dispatch_compute(
+            x.reshape(t, d), top_i.reshape(t, k), gates.reshape(t, k),
+            p["w_gate"], p["w_up"], p["w_down"], 0, cap,
+            axo=(axo[0], axo[1]["experts"]),
+        ).reshape(b, s, d)
+    elif decode_ws:
         cap = moe_capacity(t, cfg)
         out = shard_map(
             partial(_ep_decode_body, cfg, cap),
@@ -271,6 +301,9 @@ def moe_apply(
         ).reshape(b, s, d)
 
     if "shared" in p:
-        out = out + mlp_apply(p["shared"], x, cfg)
+        sh_axo = None
+        if axo is not None and "shared" in axo[1]:
+            sh_axo = (axo[0], axo[1]["shared"])
+        out = out + mlp_apply(p["shared"], x, cfg, axo=sh_axo)
     out = constrain(out, rules, "batch", "seq", "embed")
     return out.astype(x.dtype), aux

@@ -64,6 +64,30 @@ def test_axo_matmul_block_shapes_are_equivalent():
         np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-2)
 
 
+@pytest.mark.parametrize("mkn", [
+    (4, 128, 128),      # decode microbatch: the old % 128 gate rejected M=4
+    (100, 130, 70),     # every axis awkward
+    (192, 256, 64),     # head_dim-sized N
+    (1, 64, 129),       # single row, lane spill
+])
+def test_axo_matmul_pads_awkward_shapes(mkn):
+    """The wrapper pads to the block grid and slices -- parity with the
+    reference at shapes the kernel grid cannot tile natively."""
+    m, k, n = mkn
+    spec, f, g, _ = _factors(8, 3)
+    a = RNG.integers(0, 256, (m, k))
+    b = RNG.integers(0, 256, (k, n))
+    sv = jnp.asarray(spec.operand_values, jnp.float32)
+    out = axo_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(f),
+                     jnp.asarray(g), sv)
+    ref = ref_axo_matmul_lowrank(jnp.asarray(a), jnp.asarray(b),
+                                 jnp.asarray(f), jnp.asarray(g), sv)
+    assert out.shape == (m, n)
+    scale = float(jnp.max(jnp.abs(ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5 * scale, rtol=1e-5)
+
+
 def test_lowrank_error_converges_to_exact_table():
     """Rank sweep: residual vs the bit-exact table path must shrink with R."""
     a = RNG.integers(0, 256, (64, 64))
@@ -104,6 +128,26 @@ def test_flash_attention_matches_ref(shape, causal, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
     )
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 2, 2, 192, 64),     # seq not a multiple of the default bq
+    (2, 2, 1, 100, 32),     # awkward seq + head_dim
+    (1, 4, 4, 56, 16),      # shorter than any native block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_pads_awkward_shapes(shape, causal):
+    """Padded KV columns are masked to -inf (static kv_len), so parity must
+    hold for sequence lengths the block grid cannot tile natively."""
+    b, h, g, s, hd = shape
+    q = jnp.asarray(RNG.standard_normal((b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, g, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, g, s, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = ref_flash_attention(q, k, v, causal=causal)
+    assert out.shape == (b, h, s, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
 
 
 def test_flash_attention_block_shape_invariance():

@@ -55,6 +55,21 @@ def run(ctx: BenchCtx) -> list[dict]:
     rows.append(row("fastchar.behav_jax_xla", t_jx_b * 1e6, f"{d / t_jx_b:.0f} configs/s"))
     rows.append(row("fastchar.behav_speedup", 0.0, f"{t_np_b / t_jx_b:.1f}x"))
 
+    # -- telemetry overhead on the hot path (EXPERIMENTS.md §Telemetry) -------
+    # off = the NULL no-op sink (disabled telemetry must cost < 1%);
+    # on = a live sink collecting spans + dispatch counters
+    from repro.obs import telemetry as obs
+
+    with obs.use(obs.NULL):
+        t_off = _best_of(lambda: behav_metrics_jax(spec, cfgs, impl="xla"), n=5)
+    tel = obs.Telemetry("bench", parent=None)
+    with obs.use(tel):
+        t_on = _best_of(lambda: behav_metrics_jax(spec, cfgs, impl="xla"), n=5)
+    rows.append(row("fastchar.behav_telemetry_off", t_off * 1e6,
+                    f"{d / t_off:.0f} configs/s"))
+    rows.append(row("fastchar.behav_telemetry_on", t_on * 1e6,
+                    f"{(t_on - t_off) / t_off:+.2%} vs off"))
+
     if not ctx.quick:
         # interpret-mode Pallas kernel (correctness path; slow on CPU by design)
         small = gen_random(spec, 16, seed=ctx.seed)

@@ -86,6 +86,29 @@ def run(ctx: BenchCtx) -> list[dict]:
     rows.append(row("fastmoo.ga_speedup_vs_numpy", 0.0, f"{t_np / t_jx:.1f}x"))
     rows.append(row("fastmoo.ga_speedup_vs_hybrid", 0.0, f"{t_hy / t_jx:.1f}x"))
 
+    # -- telemetry overhead: NULL sink vs per-generation device taps ----------
+    # off = the compiled untapped program under the disabled sink; on = a
+    # sink with device_taps, whose program computes the archive hv EVERY
+    # generation and emits it through io_callback (EXPERIMENTS.md §Telemetry)
+    from repro.core.engine import ExecutionContext
+    from repro.obs import telemetry as obs
+
+    with obs.use(obs.NULL):
+        t0 = time.perf_counter()
+        runner.run(seed=ctx.seed, max_behav=mb, max_ppa=mp)
+        t_off = time.perf_counter() - t0
+    ctx_on = ExecutionContext(backend="jax", telemetry="on")
+    runner_on = CompiledNSGA2(fn.objs_fn, n_bits=spec.n_luts, pop_size=pop,
+                              n_gen=gens, hv_ref=ref, ctx=ctx_on)
+    runner_on.run(seed=ctx.seed, max_behav=mb, max_ppa=mp)  # compile
+    t0 = time.perf_counter()
+    runner_on.run(seed=ctx.seed, max_behav=mb, max_ppa=mp)
+    t_on = time.perf_counter() - t0
+    rows.append(row("fastmoo.ga_telemetry_off", t_off * 1e6,
+                    f"{evals / t_off:.0f} evals/s"))
+    rows.append(row("fastmoo.ga_telemetry_tapped", t_on * 1e6,
+                    f"{(t_on - t_off) / t_off:+.2%} vs off"))
+
     hv_np = r_np.hv_history[-1][1]
     hv_jx = r_jx.hv_history[-1][1]
     rows.append(row(

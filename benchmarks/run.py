@@ -3,13 +3,19 @@
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME[,NAME]]
 
-Output: ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
-Roofline/dry-run numbers live in experiments/dryrun (see EXPERIMENTS.md).
+Output: ``name,us_per_call,derived`` CSV rows (stdout), one per measurement,
+plus a machine-readable ``BENCH_<date>.json`` at the repo root (suite,
+wall-times, throughput rows, device kind, git sha) for run-over-run
+comparison.  Roofline/dry-run numbers live in experiments/dryrun (see
+EXPERIMENTS.md).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -33,6 +39,38 @@ BENCHES = [
     "serving",        # AxO-deployed LM serving: tokens/sec vs rank vs BEHAV
 ]
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _device_kind() -> str:
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        return f"{dev.platform}:{getattr(dev, 'device_kind', '?')}x{jax.device_count()}"
+    except Exception:
+        return "unknown"
+
+
+def write_report(report: dict, out_dir: str = REPO_ROOT) -> str:
+    """Write ``BENCH_<YYYY-MM-DD>.json`` (UTC date) and return its path."""
+    date = time.strftime("%Y-%m-%d", time.gmtime())
+    path = os.path.join(out_dir, f"BENCH_{date}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -40,25 +78,46 @@ def main(argv=None) -> int:
                     help="paper-scale settings (250 GA generations, full grids)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-report", action="store_true",
+                    help="skip writing BENCH_<date>.json at the repo root")
     args = ap.parse_args(argv)
 
     ctx = BenchCtx(quick=not args.full, seed=args.seed)
     names = args.only.split(",") if args.only else BENCHES
     print("name,us_per_call,derived")
     failures = 0
+    suites: dict[str, dict] = {}
+    t_start = time.perf_counter()
     for name in names:
         mod_name = f"benchmarks.bench_{name}"
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = __import__(mod_name, fromlist=["run"])
             rows = mod.run(ctx)
             emit(rows)
-            print(f"# bench_{name}: {len(rows)} rows in {time.time()-t0:.1f}s",
-                  flush=True)
+            wall = time.perf_counter() - t0
+            print(f"# bench_{name}: {len(rows)} rows in {wall:.1f}s", flush=True)
+            suites[name] = {"wall_s": round(wall, 3), "rows": rows}
         except Exception:
             traceback.print_exc()
             print(f"# bench_{name}: FAILED", flush=True)
+            suites[name] = {"wall_s": round(time.perf_counter() - t0, 3),
+                            "failed": True}
             failures += 1
+
+    if not args.no_report:
+        report = {
+            "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "git_sha": _git_sha(),
+            "device": _device_kind(),
+            "quick": not args.full,
+            "seed": args.seed,
+            "total_wall_s": round(time.perf_counter() - t_start, 3),
+            "failures": failures,
+            "suites": suites,
+        }
+        path = write_report(report)
+        print(f"# report: {path}", flush=True)
     return 1 if failures else 0
 
 

@@ -68,6 +68,13 @@ def main():
                          "(or searches once and persists) per-device tile "
                          "winners, 'search' ignores persisted winners and "
                          "re-tunes once per bucket")
+    ap.add_argument("--telemetry", choices=("on", "off"), default=None,
+                    help="'on' collects spans/counters (and per-generation "
+                         "GA hypervolume under --ga-backend jax); 'off' is a "
+                         "guaranteed no-op; default: ambient sink")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the DSE spans to PATH "
+                         "(load at ui.perfetto.dev); implies --telemetry on")
     args = ap.parse_args()
 
     if args.kernel_impl == "list":
@@ -76,6 +83,9 @@ def main():
         print(registry.describe())
         return
 
+    telemetry = args.telemetry
+    if args.trace is not None and telemetry is None:
+        telemetry = "on"
     ctx = ExecutionContext(
         backend=args.backend,
         ga_backend=args.ga_backend,
@@ -83,6 +93,7 @@ def main():
         shard_axes=SHARD_AXES if args.shard == "all" else (args.shard,),
         kernel_impl=args.kernel_impl,
         tuning=args.tuning,
+        telemetry=telemetry,
     )
     if ctx.device_count > 1:
         print(f"execution: {ctx.backend} on {ctx.device_count} devices, "
@@ -117,8 +128,10 @@ def main():
     for method in ("ga", "map", "map+ga"):
         r = run_dse(spec, ds, method, settings=st, map_pool=pool, ref=ref, app=app)
         results[method] = r
+        stages = " ".join(f"{k}={v:.2f}s" for k, v in r.timings.items())
         print(f"{method:7s} hv_ppf={r.hv_ppf:.5g} hv_vpf={r.hv_vpf:.5g} "
-              f"front={len(r.vpf_objs)} evals={r.n_evals} ({r.wall_s:.1f}s)")
+              f"front={len(r.vpf_objs)} evals={r.n_evals} ({r.wall_s:.1f}s: "
+              f"{stages})")
 
     lib = fixed_library(spec)
     if app is not None:
@@ -137,6 +150,20 @@ def main():
     ga, best = results["ga"], max(results["map"].hv_vpf, results["map+ga"].hv_vpf)
     print(f"\nAxOMaP vs GA-only: {100*(best - ga.hv_vpf)/max(ga.hv_vpf,1e-9):+.1f}% "
           f"validated hypervolume (paper reports up to +21% / +116% tight)")
+
+    tel = ctx.tel
+    if args.trace is not None:
+        tel.to_chrome_trace(args.trace)
+        print(f"chrome trace: {args.trace} ({len(tel.spans)} spans; "
+              "load at ui.perfetto.dev)")
+    if telemetry == "on":
+        disp = {k: v for k, v in sorted(tel.counters.items())
+                if k.startswith(("dispatch.", "registry.dispatch."))}
+        print(f"telemetry: {len(tel.spans)} spans, dispatch counters {disp}")
+        hv_taps = tel.series.get("fastmoo.gen", ())
+        if hv_taps:
+            print(f"per-generation hv taps: {len(hv_taps)} "
+                  f"(final hv={float(hv_taps[-1]['hv']):.5g})")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from ..core.engine import MESH_AXIS, ExecutionContext
 from ..core.fastchar import _device_tables, _gather_small
+from ..obs import telemetry as obs
 from ..core.operator_model import OperatorSpec, config_to_masks, spec_for
 
 __all__ = [
@@ -379,6 +380,8 @@ def _sharded_by_bucket(key, tiles, build):
     hit = _SHARDED_TAKE_CACHE.get(key)
     if hit is not None and hit[0] == tiles:
         return hit[1]
+    ctx = next((k for k in key if isinstance(k, ExecutionContext)), None)
+    obs.of(ctx).count("shard.rebuild.fastapp")
     fn = build()
     _SHARDED_TAKE_CACHE[key] = (tiles, fn)
     return fn
@@ -474,6 +477,7 @@ def table_matmul_jax(
     d = len(batch)
     m, k, n = a.shape[-2], a.shape[-1], b.shape[1]
     impl = _resolve_impl(impl, batch, k)
+    obs.of(batch.ctx).count(f"dispatch.fastapp.{impl}")
     mesh_ctx = _config_mesh_ctx(batch, d)
 
     if a.ndim == 2 and impl == "gemm":

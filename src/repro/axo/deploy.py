@@ -41,6 +41,7 @@ from ..kernels import ops
 from ..kernels import ref as kref
 from ..kernels.axo_matmul_kernel import axo_matmul_pallas
 from ..kernels.tuning import tiles_for
+from ..obs import telemetry as obs
 
 __all__ = [
     "AxOOperator",
@@ -136,6 +137,9 @@ def axo_linear(
     impl = "pallas" if use_kernel else "xla"
     if ctx is not None:
         impl = ctx.resolve_impl("axo_matmul", impl)
+    # trace-time resolution count: one per (re)trace per call site, the
+    # serving-path analogue of the registry dispatch counters
+    obs.of(ctx).count(f"dispatch.axo_linear.{impl}")
     if impl == "pallas":
         tiles = tiles_for(ctx, "axo_matmul.pallas",
                           m=xq.shape[0], k=k, n=n, rank=op.rank)
@@ -191,6 +195,7 @@ class AxODeployment:
         )
         av = self.signed_vals[xq]                       # (M, K)
         fa = jnp.moveaxis(self.f_table[xq], -1, 0)      # (R, M, K)
+        obs.of(self.ctx).count(f"dispatch.axo_apply.{self.impl}")
         if self.impl == "pallas":
             tiles = tiles_for(self.ctx, "axo_matmul.pallas",
                               m=av.shape[0], k=k, n=n, rank=self.op.rank)

@@ -20,6 +20,7 @@ classic truncation/removal designs, only feasibility-filtered per problem.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable
@@ -84,6 +85,7 @@ class DSESettings:
     backend: str | None = None           # None = follow context (default numpy)
     ga_backend: str | None = None
     tuning: str | None = None            # None = follow context (default "off")
+    telemetry: object | None = None      # None = follow context ("on"/"off"/sink)
     context: ExecutionContext | None = None
 
     def __post_init__(self) -> None:
@@ -94,6 +96,7 @@ class DSESettings:
                 backend=self.backend if self.backend is not None else "numpy",
                 ga_backend=self.ga_backend,
                 tuning=self.tuning if self.tuning is not None else "off",
+                telemetry=self.telemetry,
             )
         else:
             if not isinstance(ctx, ExecutionContext):
@@ -113,11 +116,21 @@ class DSESettings:
                     "legacy backend=/ga_backend=/tuning= knobs, not "
                     "disagreeing both"
                 )
+            if self.telemetry is not None:
+                if ctx.telemetry is None:
+                    # telemetry knob + default-telemetry context: adopt it
+                    ctx = dataclasses.replace(ctx, telemetry=self.telemetry)
+                elif ctx.telemetry is not self.telemetry:
+                    raise ValueError(
+                        "conflicting telemetry: pass it on the context or as "
+                        "the settings knob, not disagreeing both"
+                    )
         # mirror the context into the legacy string fields for old readers
         self.context = ctx
         self.backend = ctx.backend
         self.ga_backend = ctx.ga_backend
         self.tuning = ctx.tuning
+        self.telemetry = ctx.telemetry
 
     @property
     def resolved_ga_backend(self) -> str:
@@ -135,9 +148,15 @@ class DSEResult:
     hv_ppf: float
     hv_vpf: float
     n_evals: int
-    wall_s: float
+    wall_s: float                        # total (back-compat; = sum over stages + overhead)
     hv_history: list[tuple[int, float]] = field(default_factory=list)
     ref_point: np.ndarray | None = None
+    # per-stage wall clock (perf_counter seconds): "characterize" (estimator
+    # fit + surrogate build), "map" (MaP battery; absent for method="ga"),
+    # "ga" (search/eval + PPF), "validate" (ground-truth re-characterization).
+    # In sweep results the shared stages carry the whole-sweep duration and
+    # "validate" is per-lane.
+    timings: dict[str, float] = field(default_factory=dict)
 
 
 def hv_reference(train_ds: Dataset, settings: DSESettings, margin: float = 1.05) -> np.ndarray:
@@ -304,6 +323,7 @@ def run_dse(
     characterize_fn: Callable[[np.ndarray], np.ndarray] | None = None,
     ref: np.ndarray | None = None,
     app=None,
+    telemetry=None,
 ) -> DSEResult:
     """One full DSE run (one method, one const_sf).
 
@@ -312,103 +332,135 @@ def run_dse(
     function for application-specific DSE -- or pass the ``repro.apps`` application
     itself as ``app``, which builds that objective with ``settings.backend``
     forwarded (the accelerator-native app engine under ``backend="jax"``).
+
+    ``telemetry`` (``"on"``/``"off"``/a ``repro.obs.Telemetry``) overrides the
+    context's sink for this run; with ``"on"`` every stage records a span and
+    the sink can be exported (``settings.context.tel.to_chrome_trace(path)``).
+    Per-stage wall clock lands in ``DSEResult.timings`` regardless of
+    telemetry state.
     """
     settings = settings or DSESettings()
+    if telemetry is not None:
+        settings = dataclasses.replace(
+            settings,
+            context=dataclasses.replace(settings.context, telemetry=telemetry),
+            telemetry=None,
+        )
     ctx = settings.context
-    if app is not None and characterize_fn is None:
-        characterize_fn = app.characterize_fn(
-            spec, ppa_key=settings.ppa_key, backend=ctx
-        )
-    t0 = time.time()
-    if estimators is None:
-        estimators = fit_estimators(
-            train_ds.configs.astype(np.float64),
-            {
-                settings.behav_key: train_ds.metrics[settings.behav_key],
-                settings.ppa_key: train_ds.metrics[settings.ppa_key],
-            },
-            n_quad=settings.n_estimator_quad,
-            seed=settings.seed,
-        )
-    characterize_fn = characterize_fn or _default_characterize(spec, settings)
-    ref = hv_reference(train_ds, settings) if ref is None else ref
-    max_behav, max_ppa = _constraint_bounds(train_ds, settings)
-
-    use_jax = ctx.is_jax
-    if use_jax:
-        eval_viol_fn = _surrogate_eval_viol_jax(estimators, settings, max_behav, max_ppa)
-        eval_fn = viol_fn = None
-    else:
-        eval_viol_fn = None
-        eval_fn = _surrogate_eval(estimators, settings)
-        viol_fn = _violation_fn(estimators, settings, max_behav, max_ppa)
-
+    tel = ctx.tel
     if method not in ("ga", "map", "map+ga"):
         raise ValueError(f"unknown method {method!r}")
 
-    n_evals = 0
-    hv_history: list[tuple[int, float]] = []
-
-    if method in ("map", "map+ga") and map_pool is None:
-        map_pool = map_solution_pool(spec, train_ds, settings)
-
-    if method == "map":
-        pool = map_pool
-        if len(pool) == 0:
-            pool = gen_random(spec, 1, seed=settings.seed)  # degenerate fallback
-        if use_jax:
-            objs_est, viol = eval_viol_fn(pool)
-        else:
-            objs_est = eval_fn(pool)
-            viol = viol_fn(pool)
-        n_evals = len(pool)
-        ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
-    else:
-        init = map_pool if method == "map+ga" else None
-        ga: GAResult
-        if ctx.resolved_ga_backend == "jax":
-            from .fastchar import surrogate_objs_device  # lazy JAX import
-
-            objs_fn = (
-                eval_viol_fn.objs_fn
-                if eval_viol_fn is not None
-                else surrogate_objs_device(
-                    estimators, settings.behav_key, settings.ppa_key
+    t0 = time.perf_counter()
+    timings: dict[str, float] = {}
+    with tel.span("dse.run", method=method, backend=ctx.backend,
+                  const_sf=settings.const_sf):
+        ts = time.perf_counter()
+        with tel.span("dse.characterize"):
+            if app is not None and characterize_fn is None:
+                characterize_fn = app.characterize_fn(
+                    spec, ppa_key=settings.ppa_key, backend=ctx
                 )
-            )
-            ga = nsga2(
-                None,
-                n_bits=spec.n_luts,
-                pop_size=settings.pop_size,
-                n_gen=settings.n_gen,
-                seed=settings.seed,
-                initial_population=init,
-                hv_ref=ref,
-                backend=ctx,
-                objs_device_fn=objs_fn,
-                max_behav=max_behav,
-                max_ppa=max_ppa,
-            )
-        else:
-            ga = nsga2(
-                eval_fn,
-                n_bits=spec.n_luts,
-                pop_size=settings.pop_size,
-                n_gen=settings.n_gen,
-                seed=settings.seed,
-                initial_population=init,
-                violation_fn=viol_fn,
-                hv_ref=ref,
-                eval_viol_fn=eval_viol_fn,
-            )
-        n_evals = len(ga.archive_configs)
-        hv_history = ga.hv_history
-        ppf_c, ppf_o = _ppf_from_archive(ga.archive_configs, ga.archive_objs, ga.archive_viol)
+            if estimators is None:
+                estimators = fit_estimators(
+                    train_ds.configs.astype(np.float64),
+                    {
+                        settings.behav_key: train_ds.metrics[settings.behav_key],
+                        settings.ppa_key: train_ds.metrics[settings.ppa_key],
+                    },
+                    n_quad=settings.n_estimator_quad,
+                    seed=settings.seed,
+                )
+            characterize_fn = characterize_fn or _default_characterize(spec, settings)
+            ref = hv_reference(train_ds, settings) if ref is None else ref
+            max_behav, max_ppa = _constraint_bounds(train_ds, settings)
 
-    hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
-    vpf_c, vpf_o, hv_vpf = _validate(
-        spec, ppf_c, settings, ref, characterize_fn, max_behav, max_ppa
-    )
+            use_jax = ctx.is_jax
+            if use_jax:
+                eval_viol_fn = _surrogate_eval_viol_jax(
+                    estimators, settings, max_behav, max_ppa
+                )
+                eval_fn = viol_fn = None
+            else:
+                eval_viol_fn = None
+                eval_fn = _surrogate_eval(estimators, settings)
+                viol_fn = _violation_fn(estimators, settings, max_behav, max_ppa)
+        timings["characterize"] = time.perf_counter() - ts
+
+        n_evals = 0
+        hv_history: list[tuple[int, float]] = []
+
+        if method in ("map", "map+ga") and map_pool is None:
+            ts = time.perf_counter()
+            with tel.span("dse.map"):
+                map_pool = map_solution_pool(spec, train_ds, settings)
+            timings["map"] = time.perf_counter() - ts
+
+        ts = time.perf_counter()
+        with tel.span("dse.ga"):
+            if method == "map":
+                pool = map_pool
+                if len(pool) == 0:
+                    pool = gen_random(spec, 1, seed=settings.seed)  # degenerate fallback
+                if use_jax:
+                    objs_est, viol = eval_viol_fn(pool)
+                else:
+                    objs_est = eval_fn(pool)
+                    viol = viol_fn(pool)
+                n_evals = len(pool)
+                ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
+            else:
+                init = map_pool if method == "map+ga" else None
+                ga: GAResult
+                if ctx.resolved_ga_backend == "jax":
+                    from .fastchar import surrogate_objs_device  # lazy JAX import
+
+                    objs_fn = (
+                        eval_viol_fn.objs_fn
+                        if eval_viol_fn is not None
+                        else surrogate_objs_device(
+                            estimators, settings.behav_key, settings.ppa_key
+                        )
+                    )
+                    ga = nsga2(
+                        None,
+                        n_bits=spec.n_luts,
+                        pop_size=settings.pop_size,
+                        n_gen=settings.n_gen,
+                        seed=settings.seed,
+                        initial_population=init,
+                        hv_ref=ref,
+                        backend=ctx,
+                        objs_device_fn=objs_fn,
+                        max_behav=max_behav,
+                        max_ppa=max_ppa,
+                    )
+                else:
+                    ga = nsga2(
+                        eval_fn,
+                        n_bits=spec.n_luts,
+                        pop_size=settings.pop_size,
+                        n_gen=settings.n_gen,
+                        seed=settings.seed,
+                        initial_population=init,
+                        violation_fn=viol_fn,
+                        hv_ref=ref,
+                        eval_viol_fn=eval_viol_fn,
+                    )
+                n_evals = len(ga.archive_configs)
+                hv_history = ga.hv_history
+                ppf_c, ppf_o = _ppf_from_archive(
+                    ga.archive_configs, ga.archive_objs, ga.archive_viol
+                )
+            hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
+        timings["ga"] = time.perf_counter() - ts
+
+        ts = time.perf_counter()
+        with tel.span("dse.validate"):
+            vpf_c, vpf_o, hv_vpf = _validate(
+                spec, ppf_c, settings, ref, characterize_fn, max_behav, max_ppa
+            )
+        timings["validate"] = time.perf_counter() - ts
     return DSEResult(
         method=method,
         settings=settings,
@@ -419,9 +471,10 @@ def run_dse(
         hv_ppf=hv_ppf,
         hv_vpf=hv_vpf,
         n_evals=n_evals,
-        wall_s=time.time() - t0,
+        wall_s=time.perf_counter() - t0,
         hv_history=hv_history,
         ref_point=ref,
+        timings=timings,
     )
 
 
@@ -449,90 +502,118 @@ def run_dse_sweep(
     (bit-identical per-lane results; host-concat combine).  Lane order:
     ``for const_sf in const_sf_grid: for seed in seeds``.
     """
-    import dataclasses
-
     from .fastchar import surrogate_objs_device  # lazy JAX import
     from .fastmoo import CompiledNSGA2
 
     settings = settings or DSESettings()
     ctx = settings.context
+    tel = ctx.tel
     if ctx.resolved_ga_backend != "jax":
         raise ValueError("run_dse_sweep requires ga_backend='jax'")
     if method not in ("ga", "map+ga"):
         raise ValueError(f"unsupported sweep method {method!r}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     const_sf_grid = (
         (settings.const_sf,) if const_sf_grid is None else tuple(const_sf_grid)
     )
-    if app is not None and characterize_fn is None:
-        characterize_fn = app.characterize_fn(
-            spec, ppa_key=settings.ppa_key, backend=ctx
-        )
-    if estimators is None:
-        estimators = fit_estimators(
-            train_ds.configs.astype(np.float64),
-            {
-                settings.behav_key: train_ds.metrics[settings.behav_key],
-                settings.ppa_key: train_ds.metrics[settings.ppa_key],
-            },
-            n_quad=settings.n_estimator_quad,
-            seed=settings.seed,
-        )
-    characterize_fn = characterize_fn or _default_characterize(spec, settings)
-    ref = hv_reference(train_ds, settings)
-
-    runner = CompiledNSGA2(
-        surrogate_objs_device(estimators, settings.behav_key, settings.ppa_key),
-        n_bits=spec.n_luts,
-        pop_size=settings.pop_size,
-        n_gen=settings.n_gen,
-        hv_ref=ref,
-        ctx=ctx,
-    )
-
-    lane_settings: list[DSESettings] = []
-    bounds: list[tuple[float, float]] = []
-    pools: list[np.ndarray | None] = []
-    lane_seeds: list[int] = []
-    for sf in const_sf_grid:
-        st_sf = dataclasses.replace(settings, const_sf=sf)
-        mb, mp = _constraint_bounds(train_ds, st_sf)
-        pool = map_solution_pool(spec, train_ds, st_sf) if method == "map+ga" else None
-        for seed in seeds:
-            lane_settings.append(dataclasses.replace(st_sf, seed=int(seed)))
-            bounds.append((mb, mp))
-            pools.append(pool)
-            lane_seeds.append(int(seed))
-
-    gas = runner.run_sweep(
-        lane_seeds, bounds, pools if method == "map+ga" else None
-    )
-
-    results: list[DSEResult] = []
-    for st, (mb, mp), ga in zip(lane_settings, bounds, gas):
-        ppf_c, ppf_o = _ppf_from_archive(
-            ga.archive_configs, ga.archive_objs, ga.archive_viol
-        )
-        hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
-        vpf_c, vpf_o, hv_vpf = _validate(
-            spec, ppf_c, st, ref, characterize_fn, mb, mp
-        )
-        results.append(
-            DSEResult(
-                method=method,
-                settings=st,
-                ppf_configs=ppf_c,
-                ppf_objs_est=ppf_o,
-                vpf_configs=vpf_c,
-                vpf_objs=vpf_o,
-                hv_ppf=hv_ppf,
-                hv_vpf=hv_vpf,
-                n_evals=len(ga.archive_configs),
-                wall_s=time.time() - t0,
-                hv_history=ga.hv_history,
-                ref_point=ref,
+    shared: dict[str, float] = {}
+    with tel.span("dse.sweep", method=method, n_sf=len(const_sf_grid),
+                  n_seeds=len(seeds)):
+        ts = time.perf_counter()
+        with tel.span("dse.characterize"):
+            if app is not None and characterize_fn is None:
+                characterize_fn = app.characterize_fn(
+                    spec, ppa_key=settings.ppa_key, backend=ctx
+                )
+            if estimators is None:
+                estimators = fit_estimators(
+                    train_ds.configs.astype(np.float64),
+                    {
+                        settings.behav_key: train_ds.metrics[settings.behav_key],
+                        settings.ppa_key: train_ds.metrics[settings.ppa_key],
+                    },
+                    n_quad=settings.n_estimator_quad,
+                    seed=settings.seed,
+                )
+            characterize_fn = characterize_fn or _default_characterize(
+                spec, settings
             )
-        )
+            ref = hv_reference(train_ds, settings)
+        shared["characterize"] = time.perf_counter() - ts
+
+        lane_settings: list[DSESettings] = []
+        bounds: list[tuple[float, float]] = []
+        pools: list[np.ndarray | None] = []
+        lane_seeds: list[int] = []
+        ts = time.perf_counter()
+        with tel.span("dse.map") if method == "map+ga" else tel.span("dse.lanes"):
+            for sf in const_sf_grid:
+                st_sf = dataclasses.replace(settings, const_sf=sf)
+                mb, mp = _constraint_bounds(train_ds, st_sf)
+                pool = (
+                    map_solution_pool(spec, train_ds, st_sf)
+                    if method == "map+ga"
+                    else None
+                )
+                for seed in seeds:
+                    lane_settings.append(
+                        dataclasses.replace(st_sf, seed=int(seed))
+                    )
+                    bounds.append((mb, mp))
+                    pools.append(pool)
+                    lane_seeds.append(int(seed))
+        if method == "map+ga":
+            shared["map"] = time.perf_counter() - ts
+
+        ts = time.perf_counter()
+        with tel.span("dse.ga", n_lanes=len(lane_seeds)):
+            runner = CompiledNSGA2(
+                surrogate_objs_device(
+                    estimators, settings.behav_key, settings.ppa_key
+                ),
+                n_bits=spec.n_luts,
+                pop_size=settings.pop_size,
+                n_gen=settings.n_gen,
+                hv_ref=ref,
+                ctx=ctx,
+            )
+            gas = runner.run_sweep(
+                lane_seeds, bounds, pools if method == "map+ga" else None
+            )
+        shared["ga"] = time.perf_counter() - ts
+
+        results: list[DSEResult] = []
+        with tel.span("dse.validate", n_lanes=len(lane_seeds)):
+            for st, (mb, mp), ga in zip(lane_settings, bounds, gas):
+                tv = time.perf_counter()
+                ppf_c, ppf_o = _ppf_from_archive(
+                    ga.archive_configs, ga.archive_objs, ga.archive_viol
+                )
+                hv_ppf = hypervolume_2d(ppf_o, ref) if len(ppf_o) else 0.0
+                vpf_c, vpf_o, hv_vpf = _validate(
+                    spec, ppf_c, st, ref, characterize_fn, mb, mp
+                )
+                # shared stages ran once for the whole sweep; validate is
+                # genuinely per-lane
+                timings = dict(shared)
+                timings["validate"] = time.perf_counter() - tv
+                results.append(
+                    DSEResult(
+                        method=method,
+                        settings=st,
+                        ppf_configs=ppf_c,
+                        ppf_objs_est=ppf_o,
+                        vpf_configs=vpf_c,
+                        vpf_objs=vpf_o,
+                        hv_ppf=hv_ppf,
+                        hv_vpf=hv_vpf,
+                        n_evals=len(ga.archive_configs),
+                        wall_s=time.perf_counter() - t0,
+                        hv_history=ga.hv_history,
+                        ref_point=ref,
+                        timings=timings,
+                    )
+                )
     return results
 
 

@@ -30,7 +30,14 @@ every engine:
   * ``prng_impl`` -- the JAX PRNG family used for GA keys *and* for device-
     side dataset generation (None = default threefry2x32 for keys and the
     legacy numpy generator for datasets; ``"rbg"``/``"unsafe_rbg"`` for
-    TPU-friendly generators end to end).
+    TPU-friendly generators end to end);
+  * ``telemetry`` -- where this context's engines report spans/counters/
+    device taps (``repro.obs``).  ``None`` (default) follows the process-
+    wide sink; ``"on"`` creates a fresh per-run sink with on-device metric
+    taps enabled (counters still chain to the global aggregate); ``"off"``
+    is the no-op sink (compiled programs contain no taps at all); an
+    explicit :class:`repro.obs.Telemetry` is used as-is.  Engines read it
+    via :attr:`ExecutionContext.tel`, never the raw field.
 
 The legacy ``backend=``/``ga_backend=`` string parameters everywhere in the
 code base are **deprecated shims**: they still work, and they resolve to the
@@ -102,8 +109,18 @@ class ExecutionContext:
     interpret: bool | None = None
     prng_impl: str | None = None
     tuning: str = "off"
+    telemetry: object | None = None
 
     def __post_init__(self) -> None:
+        if self.telemetry is not None:
+            # normalize "on"/"off" to sink objects at construction so the
+            # field is stable (hashable, and "on" allocates its sink once)
+            from ..obs.telemetry import Telemetry, as_telemetry
+
+            if not isinstance(self.telemetry, Telemetry):
+                object.__setattr__(
+                    self, "telemetry", as_telemetry(self.telemetry)
+                )
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend must be 'numpy' or 'jax', got {self.backend!r}"
@@ -160,6 +177,14 @@ class ExecutionContext:
     @property
     def is_jax(self) -> bool:
         return self.backend == "jax"
+
+    @property
+    def tel(self):
+        """This context's telemetry sink (never None): the explicit sink, or
+        the process-wide current one when the field was left default."""
+        from ..obs.telemetry import current
+
+        return current() if self.telemetry is None else self.telemetry
 
     @property
     def resolved_ga_backend(self) -> str:

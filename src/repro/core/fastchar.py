@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from .engine import MESH_AXIS, ExecutionContext
 from .metrics import BEHAV_METRICS
+from ..obs import telemetry as obs
 from .operator_model import (
     OperatorSpec,
     config_to_masks,
@@ -139,6 +140,7 @@ def _partials_xla(masks: jnp.ndarray, n_bits: int, a_tile: int, d_block: int):
     vs 67 MB for the whole batch) while the whole batch remains one device
     dispatch -- this is worth ~4x over the naive vectorized form on CPU hosts.
     """
+    obs.note_trace("fastchar.partials_xla")  # body executes once per (re)trace
     spec = spec_for(n_bits)
     _, exact, w, pair_idx = _device_tables(n_bits)
     small = _gather_small(masks, n_bits)                   # (R, D, 4, B)
@@ -221,6 +223,7 @@ def _sharded_partials(ctx: ExecutionContext, n_bits: int, impl: str,
     hit = _SHARDED_PARTIALS.get(key)
     if hit is not None and hit[0] == (a_tile, d_block):
         return hit[1]
+    obs.of(ctx).count("shard.rebuild.fastchar")
     fn = jax.jit(
         ctx.shard_call(
             _partials_dispatch(n_bits, impl, a_tile, d_block, interpret),
@@ -254,6 +257,7 @@ def behav_partials(
     """
     if impl not in ("xla", "pallas"):
         raise ValueError(f"unknown fastchar impl {impl!r}")
+    obs.of(ctx).count(f"dispatch.fastchar.{impl}")
     masks = jnp.asarray(masks)
     from ..kernels import registry
     from ..kernels.tuning import tiles_for
@@ -345,19 +349,22 @@ def behav_metrics_jax(
     if ctx is not None and ctx.shards("configs"):
         block = d_block * ctx.device_count
     out = {k: np.empty(d, dtype=np.float64) for k in BEHAV_METRICS}
-    for lo_i in range(0, d, batch_size):
-        hi_i = min(lo_i + batch_size, d)
-        chunk = masks[lo_i:hi_i]
-        pad = (-len(chunk)) % block
-        if pad:
-            chunk = np.concatenate([chunk, np.zeros((pad, spec.rows), np.int32)])
-        int_p, rel_p = behav_partials(
-            spec, jnp.asarray(chunk), impl=impl, a_tile=a_tile,
-            d_block=d_block, interpret=interpret, ctx=ctx,
-        )
-        part = _combine(spec, int_p, rel_p, hi_i - lo_i)
-        for k in BEHAV_METRICS:
-            out[k][lo_i:hi_i] = part[k]
+    with obs.of(ctx).span("fastchar.behav", d=d, impl=impl):
+        for lo_i in range(0, d, batch_size):
+            hi_i = min(lo_i + batch_size, d)
+            chunk = masks[lo_i:hi_i]
+            pad = (-len(chunk)) % block
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad, spec.rows), np.int32)]
+                )
+            int_p, rel_p = behav_partials(
+                spec, jnp.asarray(chunk), impl=impl, a_tile=a_tile,
+                d_block=d_block, interpret=interpret, ctx=ctx,
+            )
+            part = _combine(spec, int_p, rel_p, hi_i - lo_i)
+            for k in BEHAV_METRICS:
+                out[k][lo_i:hi_i] = part[k]
     return out
 
 

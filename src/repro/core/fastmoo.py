@@ -55,6 +55,8 @@ import jax.numpy as jnp
 
 from .engine import MESH_AXIS, ExecutionContext
 from .moo import GAResult
+from ..obs import device as obs_device
+from ..obs import telemetry as obs
 
 __all__ = [
     "UNBOUNDED",
@@ -301,15 +303,23 @@ class CompiledNSGA2:
         self._objs_fn = objs_fn
         self._ctx = ctx
         self._prng_key = ctx.prng_key if ctx is not None else jax.random.PRNGKey
+        self._tel = ctx.tel if ctx is not None else obs.current()
         run = self._build()
         self._run = run
-        self._single = jax.jit(run)
+        # on-device per-generation hv tap: only when the context's telemetry
+        # explicitly opted into device taps (the tap computes the archive hv
+        # EVERY generation instead of at checkpoints, so it must not ride
+        # along silently), and only on the single-run program -- under vmap
+        # the io_callback fires once per lane and the lanes' generations
+        # would interleave into one series
+        self._tapped = track = self.hv_ref is not None and self._tel.device_taps
+        self._single = jax.jit(self._build(tap=True) if track else run)
         self._sweep = jax.jit(jax.vmap(run))
         self._sweep_sharded = None  # built lazily; needs the context's mesh
 
     # -- trace-time program ---------------------------------------------------
 
-    def _build(self):
+    def _build(self, tap: bool = False):
         P, L, G = self.pop_size, self.n_bits, self.n_gen
         M = P * (G + 1)
         objs_fn = self._objs_fn
@@ -321,6 +331,16 @@ class CompiledNSGA2:
         ref = (
             None if not track_hv else jnp.asarray(self.hv_ref, jnp.float32)
         )
+        # per-generation feasible-archive hv + constraint-violation stats,
+        # emitted from inside the fori_loop via io_callback (fires once per
+        # dispatch, not per trace); None when untapped so the compiled
+        # program contains no callback at all
+        tap_fn = None
+        if tap and track_hv:
+            tap_fn = self._tel.device_tap(
+                "fastmoo.gen",
+                ("gen", "hv", "arc_feasible", "pop_viol_mean", "pop_feas"),
+            )
 
         def evaluate(pop, max_b, max_p):
             objs = objs_fn(pop.astype(jnp.float32))
@@ -376,16 +396,35 @@ class CompiledNSGA2:
 
             if track_hv:
                 record = ((g % rec) == rec - 1) | (g == G - 1)
-                hv = jax.lax.cond(
-                    record,
-                    lambda: archive_hv(arc_o, arc_v),
-                    lambda: jnp.float32(0.0),
-                )
-                hv_arr = hv_arr.at[g].set(hv)
+                if tap_fn is not None:
+                    # tapped program: the archive hv is computed EVERY
+                    # generation and emitted to the host; the checkpoint
+                    # array reuses the same value, so the recorded history
+                    # is bit-identical to the untapped lax.cond program
+                    # (identical archive_hv computation on identical inputs)
+                    hv = archive_hv(arc_o, arc_v)
+                    tap_fn(
+                        g,
+                        hv,
+                        (arc_v <= 0).sum(),
+                        viol.mean(),
+                        (viol <= 0).mean(),
+                    )
+                    hv_arr = hv_arr.at[g].set(
+                        jnp.where(record, hv, jnp.float32(0.0))
+                    )
+                else:
+                    hv = jax.lax.cond(
+                        record,
+                        lambda: archive_hv(arc_o, arc_v),
+                        lambda: jnp.float32(0.0),
+                    )
+                    hv_arr = hv_arr.at[g].set(hv)
 
             return key, pop, objs, viol, arc_c, arc_o, arc_v, hv_arr, max_b, max_p
 
         def run(key, init_pop, init_count, max_b, max_p):
+            obs.note_trace("fastmoo.run")  # body executes once per (re)trace
             key, k_init = jax.random.split(key)
             pop = jax.random.randint(k_init, (P, L), 0, 2, dtype=jnp.uint8)
             seeded = jnp.arange(P)[:, None] < init_count
@@ -457,14 +496,21 @@ class CompiledNSGA2:
     ) -> GAResult:
         """One full GA run as a single device dispatch."""
         init, k = self._prep_init(initial_population)
-        out = self._single(
-            self._prng_key(seed),
-            jnp.asarray(init),
-            jnp.int32(k),
-            jnp.float32(max_behav),
-            jnp.float32(max_ppa),
-        )
-        return self._to_result({k_: np.asarray(v) for k_, v in out.items()})
+        tel = self._tel
+        tel.count("dispatch.fastmoo.run")
+        with tel.span("fastmoo.run", pop=self.pop_size, n_gen=self.n_gen,
+                      seed=seed):
+            out = self._single(
+                self._prng_key(seed),
+                jnp.asarray(init),
+                jnp.int32(k),
+                jnp.float32(max_behav),
+                jnp.float32(max_ppa),
+            )
+            host = {k_: np.asarray(v) for k_, v in out.items()}
+            if self._tapped:
+                obs_device.flush()  # tap callbacks are async; drain the series
+        return self._to_result(host)
 
     def _sharded_sweep(self):
         """jit(shard_map(vmap(run))): lanes sharded over the context's mesh.
@@ -485,6 +531,7 @@ class CompiledNSGA2:
         if self._sweep_sharded is None:
             from jax.sharding import PartitionSpec as P
 
+            self._tel.count("shard.rebuild.fastmoo")
             self._sweep_sharded = jax.jit(
                 self._ctx.shard_call(
                     jax.vmap(self._run),
@@ -527,17 +574,21 @@ class CompiledNSGA2:
             jnp.asarray(bounds[:, 0], jnp.float32),
             jnp.asarray(bounds[:, 1], jnp.float32),
         )
-        if self._ctx is not None and self._ctx.shards("lanes"):
-            pad = (-n_lanes) % self._ctx.device_count
-            if pad:
-                args = tuple(
-                    jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
-                    for a in args
-                )
-            out = self._sharded_sweep()(*args)
-        else:
-            out = self._sweep(*args)
-        host = {k_: np.asarray(v)[:n_lanes] for k_, v in out.items()}
+        tel = self._tel
+        tel.count("dispatch.fastmoo.sweep")
+        with tel.span("fastmoo.sweep", n_lanes=n_lanes, pop=self.pop_size,
+                      n_gen=self.n_gen):
+            if self._ctx is not None and self._ctx.shards("lanes"):
+                pad = (-n_lanes) % self._ctx.device_count
+                if pad:
+                    args = tuple(
+                        jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
+                        for a in args
+                    )
+                out = self._sharded_sweep()(*args)
+            else:
+                out = self._sweep(*args)
+            host = {k_: np.asarray(v)[:n_lanes] for k_, v in out.items()}
         return [
             self._to_result({k_: v[i] for k_, v in host.items()})
             for i in range(n_lanes)

@@ -102,6 +102,12 @@ def axo_matmul_pallas(
     bn = max(128, min(bn, _round_up(n, 128)))
     bk = max(128, min(bk, _round_up(k, 128)))
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    # static-shape property, so recording at trace time covers every dispatch
+    # of this shape; the fraction of the padded (M, N, K) iteration space
+    # spent multiplying zeros
+    from ..obs.telemetry import record_pad_waste
+
+    record_pad_waste("axo_matmul", (m, n, k), (mp, np_, kp))
     if (mp, np_, kp) != (m, n, k):
         # exact: padded values and factors are zero, contributing 0 products
         a_vals = jnp.pad(a_vals, ((0, mp - m), (0, kp - k)))

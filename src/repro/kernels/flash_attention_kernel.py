@@ -107,6 +107,12 @@ def flash_attention_pallas(
     bq = max(8, min(bq, _round_up(sq, 8)))
     bk = max(128, min(bk, _round_up(skv, 128)))
     sqp, skvp = _round_up(sq, bq), _round_up(skv, bk)
+    # static-shape property, so recording at trace time covers every dispatch
+    # of this shape; the fraction of the padded (Sq, Skv) score space that is
+    # padding (masked to -inf in-kernel)
+    from ..obs.telemetry import record_pad_waste
+
+    record_pad_waste("flash_attention", (sq, skv), (sqp, skvp))
     if sqp != sq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
     if skvp != skv:

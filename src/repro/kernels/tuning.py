@@ -32,12 +32,17 @@ from __future__ import annotations
 
 import functools
 import json
+import logging
 import os
 import time
+from collections.abc import MutableMapping
 
 import numpy as np
 
 from . import registry
+from ..obs import telemetry as obs
+
+logger = logging.getLogger("repro.kernels.tuning")
 
 __all__ = [
     "TUNING_POLICIES",
@@ -54,8 +59,44 @@ __all__ = [
 
 TUNING_POLICIES = ("off", "cached", "search")
 
-# Process-wide tuning telemetry (tests assert "zero re-searches" through it).
-STATS = {"searches": 0, "cache_hits": 0, "candidates_timed": 0}
+
+class _StatsView(MutableMapping):
+    """Back-compat alias for the old module-global ``STATS`` dict.
+
+    The real counters now live on the process-wide telemetry aggregate
+    (``repro.obs.GLOBAL``) under the ``tuning.*`` names below; this view
+    keeps ``STATS["searches"]``-style reads/writes (and the tests built on
+    them) working unchanged.  New code should read the telemetry counters.
+    """
+
+    _KEYS = {
+        "searches": "tuning.search",
+        "cache_hits": "tuning.cache_hit",
+        "candidates_timed": "tuning.candidate_timed",
+    }
+
+    def __getitem__(self, key: str) -> int:
+        return obs.GLOBAL.counter(self._KEYS[key])
+
+    def __setitem__(self, key: str, value: int) -> None:
+        obs.GLOBAL.set_counter(self._KEYS[key], value)
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("STATS keys are fixed")
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
+# Process-wide tuning telemetry (tests assert "zero re-searches" through it);
+# a live view over the repro.obs.GLOBAL counters, not a plain dict.
+STATS = _StatsView()
 
 # In-process memo of resolved tiles: engines call tiles_for on every dispatch
 # (table_matmul_jax per config chunk), so both the JSON re-read of "cached"
@@ -79,10 +120,12 @@ _TIMING_REPS = 3
 
 
 def reset_stats() -> None:
-    """Zero the telemetry and drop the in-process tile memo (the tests'
+    """Zero the tuning counters and drop the in-process tile memo (the tests'
     stand-in for starting a fresh process against the same disk cache)."""
     for k in STATS:
         STATS[k] = 0
+    obs.GLOBAL.set_counter("tuning.cache_miss", 0)
+    obs.GLOBAL.set_counter("tuning.cache_corrupt", 0)
     _MEMO.clear()
 
 
@@ -117,7 +160,17 @@ class TuningCache:
             try:
                 with open(self.path) as f:
                     self._data = json.load(f)
-            except (OSError, ValueError):
+            except FileNotFoundError:
+                self._data = {}  # first run on this device: normal
+            except (OSError, ValueError) as exc:
+                # an existing-but-unreadable cache silently degraded to
+                # "re-tune everything" before; surface it (the re-tune still
+                # happens, so this stays a warning, not an error)
+                logger.warning(
+                    "tuning cache %s unreadable (%s: %s) -- ignoring it and "
+                    "re-tuning", self.path, type(exc).__name__, exc,
+                )
+                obs.current().count("tuning.cache_corrupt")
                 self._data = {}
         return self._data
 
@@ -432,7 +485,7 @@ def autotune(spec: registry.KernelSpec, bucket) -> dict:
         {"tiles": {...}, "us": float, "device": str, "candidates": int,
          "rejected": int, "timings": {"a_tile=..,d_block=..": us, ...}}
     """
-    STATS["searches"] += 1
+    obs.current().count("tuning.search")
     cands = spec.candidates(bucket)
     if not cands:
         return {"tiles": spec.default_tiles(bucket), "us": None,
@@ -451,7 +504,7 @@ def autotune(spec: registry.KernelSpec, bucket) -> dict:
             t0 = time.perf_counter()
             run_case(spec, bucket, tiles)
             us = min(us, (time.perf_counter() - t0) * 1e6)
-        STATS["candidates_timed"] += 1
+        obs.current().count("tuning.candidate_timed")
         label = ",".join(f"{k}={v}" for k, v in tiles.items())
         timings[label] = round(us, 1)
         if us < best_us:
@@ -474,6 +527,8 @@ def tiles_for(ctx, name: str, cache: TuningCache | None = None, **shape) -> dict
     """
     spec = registry.get(name)
     bucket = spec.bucket(**shape)
+    tel = obs.of(ctx)
+    tel.count(f"registry.dispatch.{name}")
     if not spec.tunables:
         return {}
     policy = getattr(ctx, "tuning", None) or "off"
@@ -489,12 +544,14 @@ def tiles_for(ctx, name: str, cache: TuningCache | None = None, **shape) -> dict
     if policy == "cached":
         rec = cache.get(key)
         if rec is not None:
-            STATS["cache_hits"] += 1
+            tel.count("tuning.cache_hit")
             tiles = dict(rec["tiles"])
             if memo_key is not None:
                 _MEMO[memo_key] = tiles
             return dict(tiles)
-    rec = autotune(spec, bucket)
+        tel.count("tuning.cache_miss")
+    with tel.span(f"tuning.autotune.{name}", bucket=list(bucket)), obs.use(tel):
+        rec = autotune(spec, bucket)
     cache.put(key, rec)
     tiles = dict(rec["tiles"])
     if memo_key is not None:

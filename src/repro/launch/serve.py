@@ -23,6 +23,7 @@ from ..kernels.ops import on_tpu
 from ..models.model import model_spec
 from ..models.sharding import BASE_RULES
 from ..models.spec import init_params
+from ..obs import telemetry as obs
 from .steps import make_decode_step, make_prefill_step
 
 
@@ -53,7 +54,16 @@ def main(argv=None):
                     choices=list(AXO_LAYERS))
     ap.add_argument("--axo-impl", default=None, choices=["xla", "pallas"])
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the serving spans "
+                         "(load at ui.perfetto.dev) and print the per-request "
+                         "latency histograms")
     args = ap.parse_args(argv)
+
+    # one sink for the whole driver: prefill/decode latency histograms and
+    # tokens/sec gauges always collect (counters chain to the process
+    # aggregate); --trace additionally exports the span tree
+    tel = obs.Telemetry("serve", parent=obs.GLOBAL)
 
     cfg = get_arch(args.arch)
     if not args.full_config:
@@ -75,21 +85,46 @@ def main(argv=None):
     prefill = jax.jit(make_prefill_step(cfg, rules, max_seq=max_seq))
     decode = jax.jit(make_decode_step(cfg, rules))
 
-    def serve(pre_fn, dec_fn):
-        """Greedy generation; returns (tokens, last-step logits, timings)."""
-        t0 = time.time()
-        pre_args = (params, toks) if frontend is None else (params, toks, frontend)
-        logits, cache = pre_fn(*pre_args)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated, lgs = [nxt], [logits[:, -1]]
-        t_pre = time.time() - t0
-        t0 = time.time()
-        for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
-            logits, cache = dec_fn(params, cache, nxt, jnp.int32(i))
-            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            generated.append(nxt)
-            lgs.append(logits[:, -1])
-        return jnp.concatenate(generated, axis=1), lgs, (t_pre, time.time() - t0)
+    def serve(pre_fn, dec_fn, label="exact"):
+        """Greedy generation; returns (tokens, last-step logits, timings).
+
+        Each call is one request span: prefill latency + per-step decode
+        latency land in the telemetry histograms, the request's decode
+        throughput in a tokens/sec gauge.
+        """
+        with tel.span("serve.request", label=label, batch=args.batch,
+                      prompt_len=args.prompt_len, gen=args.gen):
+            t0 = time.perf_counter()
+            with tel.span("serve.prefill"):
+                pre_args = (
+                    (params, toks) if frontend is None else (params, toks, frontend)
+                )
+                logits, cache = pre_fn(*pre_args)
+                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            generated, lgs = [nxt], [logits[:, -1]]
+            t_pre = time.perf_counter() - t0
+            tel.observe("serve.prefill_ms", t_pre * 1e3)
+            t0 = time.perf_counter()
+            with tel.span("serve.decode", steps=args.gen - 1):
+                for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
+                    ts = time.perf_counter()
+                    logits, cache = dec_fn(params, cache, nxt, jnp.int32(i))
+                    nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+                        jnp.int32
+                    )
+                    tel.observe(
+                        "serve.decode_step_ms",
+                        (time.perf_counter() - ts) * 1e3,
+                    )
+                    generated.append(nxt)
+                    lgs.append(logits[:, -1])
+            t_dec = time.perf_counter() - t0
+            n_tok = args.batch * (args.gen - 1)
+            if t_dec > 0:
+                tel.gauge("serve.tokens_per_s", n_tok / t_dec)
+                tel.observe("serve.tokens_per_s", n_tok / t_dec)
+            tel.count("serve.requests")
+        return jnp.concatenate(generated, axis=1), lgs, (t_pre, t_dec)
 
     out, exact_lgs, (t_prefill, t_decode) = serve(prefill, decode)
     print(f"arch={cfg.name} prefill({args.batch}x{args.prompt_len})="
@@ -106,8 +141,8 @@ def main(argv=None):
                          impl=impl)
         pre_a = jax.jit(make_prefill_step(cfg, rules, max_seq=max_seq, axo=dep))
         dec_a = jax.jit(make_decode_step(cfg, rules, axo=dep))
-        out_a, _, _ = serve(pre_a, dec_a)           # warm + free-run tokens
-        _, axo_lgs, (tp, td) = serve(pre_a, dec_a)
+        out_a, _, _ = serve(pre_a, dec_a, label="axo")  # warm + free-run tokens
+        _, axo_lgs, (tp, td) = serve(pre_a, dec_a, label="axo")
 
         # teacher-forced comparison along the exact trajectory
         pre_args = (params, toks) if frontend is None else (params, toks, frontend)
@@ -130,6 +165,17 @@ def main(argv=None):
               f"prefill={tp*1e3:.1f}ms decode={td*1e3:.1f}ms  "
               f"free-run match={match:.2%} teacher-forced top1={top1:.2%} "
               f"logit rel_err={rel:.4f}")
+
+    if args.trace is not None:
+        tel.to_chrome_trace(args.trace)
+        print(f"chrome trace: {args.trace} ({len(tel.spans)} spans; "
+              "load at ui.perfetto.dev)")
+        for h in ("serve.prefill_ms", "serve.decode_step_ms"):
+            s = tel.histogram_summary(h)
+            print(f"{h}: n={s['count']} p50={s['p50']:.1f} p90={s['p90']:.1f} "
+                  f"max={s['max']:.1f}")
+        print(f"serve.tokens_per_s: {tel.gauges['serve.tokens_per_s']:.1f} "
+              f"(last request)")
     return 0
 
 

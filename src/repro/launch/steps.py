@@ -153,6 +153,9 @@ def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, max_seq: int,
     """
 
     def prefill_step(params, tokens, frontend=None):
+        from ..obs.telemetry import note_trace
+
+        note_trace("launch.prefill_step")  # runs once per (re)trace
         b = tokens.shape[0]
         cache = init_cache(cfg, b, max_seq, dtype=params["norm_f"].dtype)
         enc = frontend if cfg.encoder is not None else None
@@ -174,6 +177,9 @@ def make_decode_step(cfg: ModelConfig, rules: ShardingRules, axo=None):
     ``axo`` as in :func:`make_prefill_step`."""
 
     def decode_step(params, cache, tokens, index):
+        from ..obs.telemetry import note_trace
+
+        note_trace("launch.decode_step")  # runs once per (re)trace
         x, _, cache = forward(
             params, cfg, rules, tokens, mode="decode",
             cache=cache, cache_index=index, axo=axo,

@@ -1,0 +1,43 @@
+"""repro.obs -- unified telemetry for the DSE->serving stack.
+
+Spans + counters/gauges/histograms (:mod:`.telemetry`), JSONL/Chrome-trace
+export (:mod:`.export`), and on-device io_callback metric taps
+(:mod:`.device`).  Stdlib-only at import time; JAX is touched lazily.
+"""
+
+from .telemetry import (
+    GLOBAL,
+    NULL,
+    NullTelemetry,
+    Span,
+    Telemetry,
+    as_telemetry,
+    current,
+    note_trace,
+    of,
+    record_pad_waste,
+    use,
+)
+from .export import chrome_trace_dict, read_jsonl, write_chrome_trace, write_jsonl
+from .device import flush, make_tap, null_tap
+
+__all__ = [
+    "GLOBAL",
+    "NULL",
+    "NullTelemetry",
+    "Span",
+    "Telemetry",
+    "as_telemetry",
+    "current",
+    "note_trace",
+    "of",
+    "record_pad_waste",
+    "use",
+    "chrome_trace_dict",
+    "read_jsonl",
+    "write_chrome_trace",
+    "write_jsonl",
+    "flush",
+    "make_tap",
+    "null_tap",
+]

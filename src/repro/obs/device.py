@@ -1,0 +1,74 @@
+"""On-device metric taps: host sinks that fire once per *dispatch*.
+
+A tap is a function usable inside jitted code (even inside ``lax.fori_loop``
+bodies): it stages a ``jax.experimental.io_callback`` whose host side appends
+one record to the telemetry's series.  Because ``io_callback`` is an effect,
+XLA keeps exactly one callback per dispatch site -- the callback runs every
+time the compiled program executes (NOT once at trace time, and not once per
+jit cache entry), which is what makes per-generation curves from inside
+``CompiledNSGA2``'s ``fori_loop`` possible without hauling per-gen arrays out.
+
+Under ``vmap`` the callback fires once per batch element with unbatched
+(per-lane) arguments -- verified behaviour on jax 0.4.x; taps are therefore
+kept out of sweep programs by default (lanes would interleave into one
+series) and used on the single-run path.
+
+``jax.effects_barrier()`` must run before reading the series: callbacks are
+asynchronous on some backends.  :func:`flush` wraps that (and is safe to call
+when JAX was never imported).
+
+This module imports JAX lazily so numpy-only processes never pay for it.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["make_tap", "null_tap", "flush"]
+
+
+def null_tap(*args, **kwargs) -> None:
+    """The disabled tap: stages nothing into the traced program."""
+    return None
+
+
+def make_tap(tel, name: str, fields: tuple):
+    """Build an emit function ``tap(*vals)`` for use inside jitted code.
+
+    ``fields`` names the positional values; each host-side firing appends
+    ``{field: np_value, ..., "_host_t": perf_counter}`` to
+    ``tel.series[name]`` and bumps the ``tap.<name>`` counter.  Calls from
+    non-traced (eager) code work too -- io_callback runs the host function
+    inline.
+    """
+    import numpy as np
+    from jax.experimental import io_callback
+
+    def _sink(*vals) -> None:
+        rec = {f: np.asarray(v) for f, v in zip(fields, vals)}
+        rec["_host_t"] = time.perf_counter()
+        tel.emit(name, rec)
+        tel.count(f"tap.{name}")
+
+    def tap(*vals):
+        if len(vals) != len(fields):
+            raise TypeError(
+                f"tap {name!r} expects {len(fields)} values {fields}, "
+                f"got {len(vals)}"
+            )
+        # unordered: taps must not serialize the compiled program; record
+        # order is recovered from the emitted fields (e.g. generation index)
+        io_callback(_sink, None, *vals, ordered=False)
+
+    tap.fields = fields
+    tap.series = name
+    return tap
+
+
+def flush() -> None:
+    """Wait for outstanding tap callbacks (no-op if JAX is not loaded)."""
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        jax.effects_barrier()

@@ -3,6 +3,7 @@ zero re-searches on the second resolution, on-disk round-trip, and cached
 tiles bit-identical to default tiles under interpret mode."""
 
 import json
+import logging
 import os
 
 import numpy as np
@@ -10,6 +11,7 @@ import pytest
 
 from repro.core.engine import ExecutionContext
 from repro.kernels import registry, tuning
+from repro.obs import telemetry as obs
 
 
 @pytest.fixture()
@@ -67,6 +69,42 @@ def test_second_run_round_trips_the_disk_cache(cache_env):
     assert key.startswith("fastapp.xla|") and tuning.device_key() in key
     assert data[key]["tiles"] == tiles1
     assert data[key]["candidates"] >= 1
+
+
+def test_corrupt_cache_warns_counts_and_retunes(cache_env, caplog):
+    """An unreadable cache file must not silently degrade: it logs a warning,
+    bumps tuning.cache_corrupt, and the resolution re-tunes as on a miss."""
+    tiles1 = tuning.tiles_for(CTX, "fastapp.xla", **SHAPE)
+    path = os.path.join(cache_env, _cache_files(cache_env)[0])
+    with open(path, "w") as f:
+        f.write("{not json")
+
+    tuning.reset_stats()  # "second run" against the corrupted disk state
+    with caplog.at_level(logging.WARNING, logger="repro.kernels.tuning"):
+        tiles2 = tuning.tiles_for(CTX, "fastapp.xla", **SHAPE)
+    # the re-tune ran (winners are timing-dependent; same tunable keys)
+    assert set(tiles2) == set(tiles1)
+    assert "unreadable" in caplog.text and path in caplog.text
+    assert obs.GLOBAL.counter("tuning.cache_corrupt") == 1
+    assert tuning.STATS["searches"] == 1 and tuning.STATS["cache_hits"] == 0
+    # the re-tune re-persisted a readable cache
+    with open(path) as f:
+        assert json.load(f)
+
+
+def test_stats_view_tracks_telemetry_counters(cache_env):
+    """STATS is a live view over the repro.obs.GLOBAL counters (the old
+    module-global dict API keeps working)."""
+    assert dict(tuning.STATS) == {
+        "searches": 0, "cache_hits": 0, "candidates_timed": 0,
+    }
+    obs.GLOBAL.count("tuning.search", 2)
+    assert tuning.STATS["searches"] == 2
+    tuning.STATS["searches"] = 0
+    assert obs.GLOBAL.counter("tuning.search") == 0
+    assert len(tuning.STATS) == 3 and set(tuning.STATS) == {
+        "searches", "cache_hits", "candidates_timed",
+    }
 
 
 def test_search_policy_ignores_disk_but_memoizes_in_process(cache_env):

@@ -88,8 +88,10 @@ def run(ctx: BenchCtx) -> list[dict]:
 
     # -- telemetry overhead: NULL sink vs per-generation device taps ----------
     # off = the compiled untapped program under the disabled sink; on = a
-    # sink with device_taps, whose program computes the archive hv EVERY
-    # generation and emits it through io_callback (EXPERIMENTS.md §Telemetry)
+    # sink with device_taps, whose program maintains an incremental
+    # nondominated-front buffer and emits its hv EVERY generation through
+    # io_callback -- O(front) per generation instead of re-sorting the whole
+    # P*(G+1) archive (EXPERIMENTS.md §Telemetry)
     from repro.core.engine import ExecutionContext
     from repro.obs import telemetry as obs
 

@@ -2,12 +2,16 @@
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME[,NAME]]
+      [--repeats N]
 
 Output: ``name,us_per_call,derived`` CSV rows (stdout), one per measurement,
-plus a machine-readable ``BENCH_<date>.json`` at the repo root (suite,
-wall-times, throughput rows, device kind, git sha) for run-over-run
-comparison.  Roofline/dry-run numbers live in experiments/dryrun (see
-EXPERIMENTS.md).
+plus a machine-readable ``BENCH_<date>.json`` at the repo root (suite
+wall-times as min/median/IQR over ``--repeats`` trials, throughput rows,
+device kind, git sha) for run-over-run comparison.  Every report is also
+appended to the ``experiments/bench_history/`` store, which the regression
+sentinel (``python -m repro.obs.regress``) compares against the committed
+baselines under ``benchmarks/baselines/``.  Roofline/dry-run numbers live in
+experiments/dryrun (see EXPERIMENTS.md).
 """
 
 from __future__ import annotations
@@ -78,9 +82,23 @@ def main(argv=None) -> int:
                     help="paper-scale settings (250 GA generations, full grids)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="trials per suite; wall-time reports min/median/IQR "
+                         "over them (first trial includes jit compiles, so "
+                         "min ~= warm wall).  Default 3.")
     ap.add_argument("--no-report", action="store_true",
-                    help="skip writing BENCH_<date>.json at the repo root")
+                    help="skip writing BENCH_<date>.json (and the history "
+                         "append) -- stdout rows only")
+    ap.add_argument("--no-history", action="store_true",
+                    help="write the report but do not append it to "
+                         "experiments/bench_history/")
     args = ap.parse_args(argv)
+    repeats = max(1, args.repeats)
+
+    # provenance captured once per run, stamped into every suite entry (the
+    # regression sentinel refuses to reason about rows with no origin)
+    git_sha = _git_sha()
+    device = _device_kind()
 
     ctx = BenchCtx(quick=not args.full, seed=args.seed)
     names = args.only.split(",") if args.only else BENCHES
@@ -90,34 +108,58 @@ def main(argv=None) -> int:
     t_start = time.perf_counter()
     for name in names:
         mod_name = f"benchmarks.bench_{name}"
-        t0 = time.perf_counter()
+        walls: list[float] = []
+        rows: list[dict] = []
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            rows = mod.run(ctx)
-            emit(rows)
-            wall = time.perf_counter() - t0
-            print(f"# bench_{name}: {len(rows)} rows in {wall:.1f}s", flush=True)
-            suites[name] = {"wall_s": round(wall, 3), "rows": rows}
+            for rep in range(repeats):
+                t0 = time.perf_counter()
+                rows = mod.run(ctx)
+                walls.append(time.perf_counter() - t0)
+                if rep == 0:
+                    emit(rows)  # rows are deterministic: print the first trial
+            from repro.obs.regress import wall_stats
+
+            entry = wall_stats(walls)
+            entry.update({
+                "rows": rows,
+                "git_sha": git_sha,
+                "device": device,
+                "repeats": len(walls),
+            })
+            suites[name] = entry
+            print(f"# bench_{name}: {len(rows)} rows, wall "
+                  f"min={entry['wall_s_min']:.1f}s "
+                  f"median={entry['wall_s_median']:.1f}s "
+                  f"iqr={entry['wall_s_iqr']:.2f}s over {len(walls)} trials",
+                  flush=True)
         except Exception:
             traceback.print_exc()
             print(f"# bench_{name}: FAILED", flush=True)
-            suites[name] = {"wall_s": round(time.perf_counter() - t0, 3),
-                            "failed": True}
+            suites[name] = {"wall_s": round(sum(walls), 3), "failed": True,
+                            "git_sha": git_sha, "device": device,
+                            "repeats": len(walls)}
             failures += 1
 
     if not args.no_report:
         report = {
             "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-            "git_sha": _git_sha(),
-            "device": _device_kind(),
+            "git_sha": git_sha,
+            "device": device,
             "quick": not args.full,
             "seed": args.seed,
+            "repeats": repeats,
             "total_wall_s": round(time.perf_counter() - t_start, 3),
             "failures": failures,
             "suites": suites,
         }
         path = write_report(report)
         print(f"# report: {path}", flush=True)
+        if not args.no_history:
+            from repro.obs.regress import append_history
+
+            hist = append_history(report)
+            print(f"# history: {hist}", flush=True)
     return 1 if failures else 0
 
 

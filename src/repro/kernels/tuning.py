@@ -53,6 +53,7 @@ __all__ = [
     "autotune",
     "run_case",
     "oracle_case",
+    "cache_status",
     "STATS",
     "reset_stats",
 ]
@@ -201,6 +202,34 @@ def default_cache() -> TuningCache:
 
 def _cache_key(spec: registry.KernelSpec, bucket) -> str:
     return f"{spec.name}|{device_key()}|{'x'.join(str(b) for b in bucket)}"
+
+
+def cache_status(cache: TuningCache | None = None) -> dict:
+    """Health snapshot of the on-disk tuning cache (``/healthz`` payload).
+
+    Reports the per-device cache path, whether it exists on disk, how many
+    tuned winners it holds, and the process's cache-traffic counters.  Never
+    raises: a corrupt or unreadable cache reads as zero entries (the same
+    recovery `_load` applies), and a JAX-less process reports the device key
+    as unavailable.
+    """
+    try:
+        cache = cache or default_cache()
+        path = cache.path
+        entries = len(cache._load())
+        exists = os.path.exists(path)
+    except Exception as exc:  # no jax / no device: still a valid health answer
+        return {"ok": False, "error": f"{type(exc).__name__}: {exc}"}
+    return {
+        "ok": True,
+        "path": path,
+        "exists": exists,
+        "entries": entries,
+        "hits": obs.GLOBAL.counter("tuning.cache_hit"),
+        "misses": obs.GLOBAL.counter("tuning.cache_miss"),
+        "searches": obs.GLOBAL.counter("tuning.search"),
+        "corrupt": obs.GLOBAL.counter("tuning.cache_corrupt"),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -17,8 +17,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["HW", "Roofline", "collective_bytes", "roofline_from_compiled",
-           "model_flops"]
+__all__ = ["HW", "Roofline", "collective_bytes", "compiled_cost",
+           "roofline_from_compiled", "model_flops"]
 
 
 @dataclass(frozen=True)
@@ -150,27 +150,55 @@ class Roofline:
         }
 
 
+def compiled_cost(compiled) -> dict:
+    """XLA's own accounting of a compiled artifact, as plain floats.
+
+    Normalizes ``compiled.cost_analysis()`` (dict or single-element list
+    depending on backend) and ``compiled.memory_analysis()`` into one flat
+    record; missing analyses (some backends return None) read as zeros.
+    Shared by the roofline model and ``obs.profile``'s cost gauges.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # some backends return [dict]
+        cost = cost[0] if cost else {}
+    if cost is None:
+        cost = {}
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "temp_bytes": 0.0,
+        "argument_bytes": 0.0,
+        "output_bytes": 0.0,
+        "peak_bytes": 0.0,
+    }
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    if mem is not None:
+        out["temp_bytes"] = float(getattr(mem, "temp_size_in_bytes", 0.0) or 0.0)
+        out["argument_bytes"] = float(
+            getattr(mem, "argument_size_in_bytes", 0.0) or 0.0
+        )
+        out["output_bytes"] = float(
+            getattr(mem, "output_size_in_bytes", 0.0) or 0.0
+        )
+        out["peak_bytes"] = out["temp_bytes"] + out["argument_bytes"]
+    return out
+
+
 def roofline_from_compiled(
     compiled, arch: str, shape: str, mesh_name: str, chips: int,
     model_fl: float, hw: HW = V5E,
 ) -> Roofline:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):           # some backends return [dict]
-        cost = cost[0]
-    flops = float(cost.get("flops", 0.0))
-    byts = float(cost.get("bytes accessed", 0.0))
+    cost = compiled_cost(compiled)
     coll = collective_bytes(compiled.as_text())
-    mem = compiled.memory_analysis()
-    bpd = 0.0
-    if mem is not None:
-        for attr in ("temp_size_in_bytes",):
-            bpd += float(getattr(mem, attr, 0.0) or 0.0)
-        bpd += float(getattr(mem, "argument_size_in_bytes", 0.0) or 0.0)
     return Roofline(
         arch=arch, shape=shape, mesh=mesh_name, chips=chips,
-        hlo_flops=flops, hlo_bytes=byts,
+        hlo_flops=cost["flops"], hlo_bytes=cost["bytes_accessed"],
         coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
-        bytes_per_device=bpd, model_flops=model_fl, hw=hw,
+        bytes_per_device=cost["peak_bytes"], model_flops=model_fl, hw=hw,
     )
 
 

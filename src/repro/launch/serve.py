@@ -58,12 +58,33 @@ def main(argv=None):
                     help="write a Chrome-trace JSON of the serving spans "
                          "(load at ui.perfetto.dev) and print the per-request "
                          "latency histograms")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve GET /metrics (Prometheus text exposition of "
+                         "the live obs.GLOBAL state) and GET /healthz (device "
+                         "liveness + tuning cache + deployment status) on "
+                         "this port; 0 picks an ephemeral port")
+    ap.add_argument("--requests", type=int, default=1,
+                    help="number of exact serving requests to run (>1 fills "
+                         "the latency histograms for scraping)")
+    ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
+                    help="keep the process (and the metrics endpoint) alive "
+                         "this long after serving, so a scraper can collect")
     args = ap.parse_args(argv)
 
     # one sink for the whole driver: prefill/decode latency histograms and
     # tokens/sec gauges always collect (counters chain to the process
     # aggregate); --trace additionally exports the span tree
     tel = obs.Telemetry("serve", parent=obs.GLOBAL)
+
+    # /metrics scrapes the process-wide aggregate (which sees this driver's
+    # sink through the parent chain), so anything else the process records --
+    # kernel dispatch counters, pad waste, tuning traffic -- is exposed too
+    metrics = None
+    if args.metrics_port is not None:
+        from ..obs.prom import MetricsServer
+
+        metrics = MetricsServer(tel=obs.GLOBAL, port=args.metrics_port).start()
+        print(f"metrics: {metrics.url}/metrics  health: {metrics.url}/healthz")
 
     cfg = get_arch(args.arch)
     if not args.full_config:
@@ -126,10 +147,14 @@ def main(argv=None):
             tel.count("serve.requests")
         return jnp.concatenate(generated, axis=1), lgs, (t_pre, t_dec)
 
+    for _ in range(max(0, args.requests - 1)):
+        serve(prefill, decode)  # warm repeats: histogram filler for scraping
     out, exact_lgs, (t_prefill, t_decode) = serve(prefill, decode)
     print(f"arch={cfg.name} prefill({args.batch}x{args.prompt_len})="
           f"{t_prefill*1e3:.1f}ms decode({args.gen - 1} steps)={t_decode*1e3:.1f}ms")
     print("generated token ids (row 0):", np.asarray(out[0]).tolist())
+    if metrics is not None:
+        metrics.set_deployment({"mode": "exact", "arch": cfg.name})
 
     if args.axo_rank > 0:
         # deploy the operator into every requested linear layer, rebuild the
@@ -165,6 +190,16 @@ def main(argv=None):
               f"prefill={tp*1e3:.1f}ms decode={td*1e3:.1f}ms  "
               f"free-run match={match:.2%} teacher-forced top1={top1:.2%} "
               f"logit rel_err={rel:.4f}")
+        tel.gauge("serve.axo_top1", top1)
+        tel.gauge("serve.axo_free_run_match", match)
+        tel.gauge("serve.axo_logit_rel_err", rel)
+        if metrics is not None:
+            metrics.set_deployment({
+                "mode": "axo", "arch": cfg.name, "rank": args.axo_rank,
+                "impl": impl, "layers": list(args.axo_layers),
+                "projections": dep.n_entries,
+                "top1": top1, "free_run_match": match,
+            })
 
     if args.trace is not None:
         tel.to_chrome_trace(args.trace)
@@ -176,6 +211,12 @@ def main(argv=None):
                   f"max={s['max']:.1f}")
         print(f"serve.tokens_per_s: {tel.gauges['serve.tokens_per_s']:.1f} "
               f"(last request)")
+
+    if metrics is not None and args.hold > 0:
+        print(f"holding {args.hold:.0f}s for scrapers ({metrics.url}/metrics)")
+        time.sleep(args.hold)
+    if metrics is not None:
+        metrics.stop()
     return 0
 
 

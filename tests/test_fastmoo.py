@@ -132,6 +132,81 @@ def test_device_hypervolume_duplicates_and_empty():
 
 
 # ---------------------------------------------------------------------------
+# Incremental nondominated-front buffer (the per-generation tap hv path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_front_update_hypervolume_matches_full_recompute(seed):
+    ref = jnp.asarray([1.2, 1.1], jnp.float32)
+    cap = 64
+    buf_x = jnp.full((cap,), jnp.inf, jnp.float32)
+    buf_y = jnp.full((cap,), jnp.inf, jnp.float32)
+    all_objs, all_viol = [], []
+    rng = np.random.default_rng(seed)
+    for _ in range(5):  # stream batches in, as gen_step does with children
+        objs, viol = _rand_objs_viol(20, int(rng.integers(1 << 30)))
+        buf_x, buf_y = fastmoo.front_update(
+            buf_x, buf_y, jnp.asarray(objs, jnp.float32),
+            jnp.asarray(viol, jnp.float32), ref,
+        )
+        all_objs.append(objs)
+        all_viol.append(viol)
+        seen = np.concatenate(all_objs)
+        feas = np.concatenate(all_viol) <= 0
+        want = float(
+            fastmoo.hypervolume_2d_jax(
+                jnp.asarray(seen, jnp.float32), jnp.asarray(feas), ref
+            )
+        )
+        got = float(fastmoo.front_hypervolume(buf_x, buf_y, ref))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_front_update_keeps_strict_staircase():
+    ref = jnp.asarray([10.0, 10.0], jnp.float32)
+    buf_x = jnp.full((8,), jnp.inf, jnp.float32)
+    buf_y = jnp.full((8,), jnp.inf, jnp.float32)
+    # (2,2) dominates (3,3); (1,5) and (5,1) are incomparable; (2,9) is a
+    # duplicate-x with worse y; infeasible and out-of-ref points are dropped
+    objs = jnp.asarray([[2, 2], [3, 3], [1, 5], [5, 1], [2, 9],
+                        [0.1, 0.1], [11, 0.5]], jnp.float32)
+    viol = jnp.asarray([0, 0, 0, 0, 0, 1, 0], jnp.float32)
+    bx, by = fastmoo.front_update(buf_x, buf_y, objs, viol, ref)
+    kept = np.isfinite(np.asarray(bx))
+    pts = sorted(zip(np.asarray(bx)[kept].tolist(),
+                     np.asarray(by)[kept].tolist()))
+    assert pts == [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0)]
+    # members are packed at the front of the buffer, padding strictly +inf
+    assert kept.sum() == 3 and kept[:3].all() and not kept[3:].any()
+
+
+def test_front_buffer_capacity_truncates_worst():
+    ref = jnp.asarray([100.0, 100.0], jnp.float32)
+    cap = 4
+    buf_x = jnp.full((cap,), jnp.inf, jnp.float32)
+    buf_y = jnp.full((cap,), jnp.inf, jnp.float32)
+    # 8 mutually nondominated points on a line: only cap of them can stay
+    xs = np.arange(8, dtype=np.float32)
+    objs = jnp.asarray(np.stack([xs, 8.0 - xs], axis=1))
+    viol = jnp.zeros(8, jnp.float32)
+    bx, by = fastmoo.front_update(buf_x, buf_y, objs, viol, ref)
+    assert bx.shape == (cap,)
+    kept = np.isfinite(np.asarray(bx))
+    assert kept.sum() == cap
+    # truncation keeps the lexicographically smallest-x members
+    np.testing.assert_array_equal(np.asarray(bx), xs[:cap])
+
+
+def test_runner_front_capacity_default_and_override():
+    r = fastmoo.CompiledNSGA2(_toy_objs_jax, n_bits=4, pop_size=16, n_gen=4)
+    assert r.front_capacity == 4 * 16
+    r2 = fastmoo.CompiledNSGA2(_toy_objs_jax, n_bits=4, pop_size=16, n_gen=4,
+                               front_capacity=32)
+    assert r2.front_capacity == 32
+
+
+# ---------------------------------------------------------------------------
 # Pallas dominance-count kernel (interpret mode)
 # ---------------------------------------------------------------------------
 

@@ -9,8 +9,9 @@ Four contracts:
     per trace), and a disabled (NULL) tap stages nothing -- the program is
     bit-identical to an uninstrumented build.
   * **CompiledNSGA2** with ``telemetry="on"`` emits a per-generation
-    feasible-archive hypervolume curve that is monotone and whose final
-    value matches the checkpoint hv history **bit-identically**.
+    feasible-front hypervolume curve (incremental front buffer, O(front)
+    per generation) that is monotone; the checkpoint hv history stays
+    archive-based and **bit-identical** to the untapped program's.
   * **run_dse** stage spans cover >= 95% of the run's wall clock, and
     ``DSEResult.timings`` records the stages regardless of telemetry state.
 """
@@ -365,14 +366,17 @@ def test_tapped_nsga2_per_generation_hv_curve():
     assert len(taps) == 10
     assert [int(t["gen"]) for t in taps] == list(range(10))
     hvs = [float(t["hv"]) for t in taps]
-    # archive only grows -> per-generation hv is monotone non-decreasing
+    # front only grows -> per-generation hv is monotone non-decreasing
     assert all(b >= a for a, b in zip(hvs, hvs[1:]))
-    # final tap value is BIT-IDENTICAL to the checkpoint history (same
-    # archive_hv computation on the same arrays inside one program)
-    assert hvs[-1] == r.hv_history[-1][1]
-    # constraint-violation stats ride along
+    # the tap hv comes from the incremental front buffer: equal to the
+    # archive-based checkpoint up to f32 summation order (the checkpoint
+    # history itself stays bitwise archive-based, asserted below)
+    assert np.isclose(hvs[-1], r.hv_history[-1][1], rtol=1e-6)
+    # constraint-violation stats + front size ride along
     assert all(float(t["pop_feas"]) == 1.0 for t in taps)  # unconstrained run
     assert all(int(t["arc_feasible"]) > 0 for t in taps)
+    fronts = [int(t["front"]) for t in taps]
+    assert all(0 < f <= runner.front_capacity for f in fronts)
 
     # a second dispatch accumulates (per dispatch, not per trace)
     runner.run(seed=1)

@@ -37,6 +37,78 @@ def _best_of(fn, n: int = 3) -> float:
     return best
 
 
+def run_tablefree(ctx: BenchCtx) -> list[dict]:
+    """Table-free app arithmetic: entry synthesis vs build-then-gather.
+
+    The DSE loop brings fresh configs every generation, so the honest
+    comparison is end-to-end per fresh batch: device product-table build +
+    gather matmul vs entry-synthesized matmul that never materializes the
+    (D, 2^N, 2^N) tables.  Plus the FFN chain with device-side
+    GeLU+requantize between the GEMMs (``requant="device"``).
+    """
+    from repro.apps import APPLICATIONS
+    from repro.apps.fastapp import table_batch, table_matmul_jax
+    from repro.core.operator_model import spec_for
+
+    spec = spec_for(8)
+    rows: list[dict] = []
+    rng = np.random.default_rng(ctx.seed)
+
+    def bench_pair(tag, d, a, b, note):
+        cfgs = gen_random(spec, d, seed=ctx.seed)
+
+        def table_path():
+            batch = table_batch(spec, cfgs)  # fresh batch: tables rebuilt
+            return np.asarray(table_matmul_jax(batch, a, b, impl="xla"))
+
+        def entry_path():
+            batch = table_batch(spec, cfgs)  # fresh: entries synthesized
+            return np.asarray(table_matmul_jax(batch, a, b, impl="entry"))
+
+        table_path(), entry_path()  # compile both
+        t_tab = _best_of(table_path)
+        t_ent = _best_of(entry_path)
+        rows.append(row(f"fastapp.{tag}_table_build", t_tab * 1e6,
+                        f"{d / t_tab:.0f} configs/s (build+gather)"))
+        rows.append(row(f"fastapp.{tag}_table_free", t_ent * 1e6,
+                        f"{d / t_ent:.0f} configs/s (no tables)"))
+        rows.append(row(f"fastapp.{tag}_table_free_speedup", 0.0,
+                        f"{t_tab / t_ent:.2f}x ({note}, bit-identical)"))
+
+    # headline: decode-shape GEMV at DSE batch width -- the (D, 2^N, 2^N)
+    # build dominates the arithmetic, so synthesizing entries wins outright
+    d = 128 if ctx.quick else 256
+    bench_pair("gemv", d,
+               rng.integers(0, spec.n_inputs, (8, 64)),
+               rng.integers(0, spec.n_inputs, (64, 8)),
+               f"8x64x8 GEMV, D={d}")
+
+    # honest counterpoint: a gather-bound app GEMM (mnist logits) -- here the
+    # per-row entry gathers cost ~4x the single table gather and the build
+    # amortizes, so the table path stays ahead on CPU at 8 bits.  The entry
+    # path's case at this shape is memory (12 bits and up), not speed.
+    app = APPLICATIONS["mnist"]()
+    app._prepare(spec.n_bits)
+    bench_pair("gemm", 32 if ctx.quick else 128,
+               app._x_codes, app._w_codes,
+               f"mnist GEMM, D={32 if ctx.quick else 128}")
+
+    # FFN with the GEMM1 -> GeLU -> requant -> GEMM2 chain fully on device
+    d_ffn = 16 if ctx.quick else 64
+    cfgs_f = gen_random(spec, d_ffn, seed=ctx.seed)
+    host = APPLICATIONS["ffn"]()
+    dev = APPLICATIONS["ffn"](requant="device")
+    host.behav(spec, cfgs_f, backend="jax")
+    dev.behav(spec, cfgs_f, backend="jax")
+    t_h = _best_of(lambda: host.behav(spec, cfgs_f, backend="jax"))
+    t_d = _best_of(lambda: dev.behav(spec, cfgs_f, backend="jax"))
+    rows.append(row("fastapp.ffn_requant_host", t_h * 1e6,
+                    f"{d_ffn / t_h:.0f} configs/s"))
+    rows.append(row("fastapp.ffn_requant_device", t_d * 1e6,
+                    f"{t_h / t_d:.2f}x vs host requant"))
+    return rows
+
+
 def run(ctx: BenchCtx) -> list[dict]:
     spec = ctx.spec8
     rows: list[dict] = []
@@ -77,6 +149,8 @@ def run(ctx: BenchCtx) -> list[dict]:
                     f"{d / t_tn:.0f} tables/s"))
     rows.append(row("fastapp.product_tables_jax", t_tj * 1e6,
                     f"{d / t_tj:.0f} tables/s"))
+
+    rows.extend(run_tablefree(ctx))
 
     if not ctx.quick:
         # interpret-mode Pallas table-GEMV (correctness path, slow on CPU)

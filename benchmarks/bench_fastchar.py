@@ -32,6 +32,51 @@ def _best_of(fn, n: int = 3) -> float:
     return best
 
 
+def run_tablefree(ctx: BenchCtx) -> list[dict]:
+    """Table-free characterization: entry synthesis vs the table-build path.
+
+    ``impl="entry"`` synthesizes per-row product planes from the (D, L)
+    config masks on device instead of gathering from prebuilt row tables --
+    bit-identical metrics, no table-build dispatch.  The 12-bit row is the
+    capability unlock: exhaustive (D, 2^24) error accumulation is impossible
+    there, so ``behav_metrics_sampled`` streams common-random-number samples
+    in bounded memory with a bootstrap CI.
+    """
+    from repro.core.fastchar import behav_metrics_sampled
+    from repro.core.operator_model import spec_for
+
+    spec = ctx.spec8
+    rows: list[dict] = []
+    d = 256
+    cfgs = gen_random(spec, d, seed=ctx.seed)
+
+    behav_metrics_jax(spec, cfgs, impl="xla")    # compile both engines
+    behav_metrics_jax(spec, cfgs, impl="entry")
+    t_tab = _best_of(lambda: behav_metrics_jax(spec, cfgs, impl="xla"))
+    t_ent = _best_of(lambda: behav_metrics_jax(spec, cfgs, impl="entry"))
+    rows.append(row("fastchar.behav_table_build", t_tab * 1e6,
+                    f"{d / t_tab:.0f} configs/s"))
+    rows.append(row("fastchar.behav_table_free", t_ent * 1e6,
+                    f"{d / t_ent:.0f} configs/s"))
+    rows.append(row("fastchar.behav_table_free_speedup", 0.0,
+                    f"{t_tab / t_ent:.2f}x (8x8, D={d}, bit-identical)"))
+
+    # 12-bit (L=78): sampled-BEHAV throughput where exhaustive cannot run
+    spec12 = spec_for(12)
+    d12 = 16 if ctx.quick else 64
+    n_s = 8192 if ctx.quick else 32768
+    cfgs12 = gen_random(spec12, d12, seed=ctx.seed)
+    behav_metrics_sampled(spec12, cfgs12, n_samples=n_s, seed=ctx.seed)
+    t_12 = _best_of(
+        lambda: behav_metrics_sampled(spec12, cfgs12, n_samples=n_s,
+                                      seed=ctx.seed),
+        n=1 if ctx.quick else 2,
+    )
+    rows.append(row("fastchar.behav_sampled_12bit", t_12 * 1e6,
+                    f"{d12 / t_12:.1f} configs/s (S={n_s}, bounded mem)"))
+    return rows
+
+
 def run(ctx: BenchCtx) -> list[dict]:
     spec = ctx.spec8
     rows: list[dict] = []
@@ -79,6 +124,8 @@ def run(ctx: BenchCtx) -> list[dict]:
         )
         rows.append(row("fastchar.behav_pallas_interpret", t_pl * 1e6,
                         f"{16 / t_pl:.0f} configs/s"))
+
+    rows.extend(run_tablefree(ctx))
 
     # -- NSGA-II surrogate fitness: one jit dispatch per generation -----------
     from repro.core.automl import fit_estimators

@@ -1,0 +1,20 @@
+"""Table-free operator engine: entry synthesis vs the table-build paths.
+
+Focused suite for CI smoke (``--only tablefree``): the characterization and
+app-GEMM rows compare the entry-synthesized engines against build-then-gather
+on fresh config batches (the DSE-loop case), and the 12-bit sampled row
+exercises the bounded-memory capability that the table paths cannot reach at
+all.  The same rows also ride along inside the full ``fastchar``/``fastapp``
+suites; this module just runs them without the rest of those suites' numpy
+oracle baselines.
+"""
+
+from __future__ import annotations
+
+from .bench_fastapp import run_tablefree as _app_rows
+from .bench_fastchar import run_tablefree as _char_rows
+from .common import BenchCtx
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    return _char_rows(ctx) + _app_rows(ctx)

@@ -38,6 +38,7 @@ BENCHES = [
     "kernels",        # beyond-paper kernel parity
     "fastchar",       # batched characterization engine vs numpy oracle
     "fastapp",        # batched application-BEHAV engine vs numpy oracle
+    "tablefree",      # entry-synthesized engines vs table-build + 12-bit sampled
     "fastmoo",        # device NSGA-II engine vs numpy oracle GA
     "shard",          # multi-device ExecutionContext scaling (forced host devs)
     "serving",        # AxO-deployed LM serving: tokens/sec vs rank vs BEHAV

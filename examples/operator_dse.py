@@ -32,7 +32,7 @@ from repro.core.dse import (
     map_solution_pool,
     run_dse,
 )
-from repro.core.engine import SHARD_AXES, ExecutionContext
+from repro.core.engine import KERNEL_IMPLS, SHARD_AXES, ExecutionContext
 from repro.core.moo import hypervolume_2d
 from repro.core.operator_model import spec_for
 
@@ -57,7 +57,7 @@ def main():
                     help="which batch axes ride the mesh: 'configs' "
                          "(characterization/app scoring), 'lanes' (sweep "
                          "lanes), or both (default)")
-    ap.add_argument("--kernel-impl", choices=("xla", "pallas", "gemm", "list"),
+    ap.add_argument("--kernel-impl", choices=KERNEL_IMPLS + ("list",),
                     default=None, help="preferred kernel impl where an engine "
                                        "offers a menu (default: auto); 'list' "
                                        "prints the registered impls per engine "

@@ -23,6 +23,15 @@ arithmetic implementations:
   ``impl="pallas"`` (default on TPU for config-shared matmuls) -- the batched
       table-GEMV kernel in ``kernels.app_kernels`` that keeps each config's
       table VMEM-resident across the K reduction (interpret-mode on CPU).
+  ``impl="entry"`` / ``impl="entry_pallas"`` -- **table-free** twins.  The
+      per-row ``(4, B)`` planes are synthesized on device directly from the
+      ``(D, R)`` config masks by the carry-chain model
+      (``fastchar._synth_small_jax`` for the XLA path, in-kernel
+      ``_chain_eval`` for the Pallas GEMV), so neither the host row-table
+      gather nor the ``(D, 2^N, 2^N)`` product-table build ever runs --
+      which is what admits 12-bit operands, where the full table would be
+      67 MB *per config*.  Bit-identical to the table paths by construction
+      (the synthesized planes equal the gathered ones; asserted in tests).
 
 Per-app BEHAV heads combine integer device outputs (logit argmax mismatch
 counts, filtered signals, conv outputs) on the host in float64 with exactly
@@ -51,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.engine import MESH_AXIS, ExecutionContext
-from ..core.fastchar import _device_tables, _gather_small
+from ..core.fastchar import _device_tables, _gather_small, _synth_small_jax
 from ..obs import telemetry as obs
 from ..core.operator_model import OperatorSpec, config_to_masks, spec_for
 
@@ -68,7 +77,9 @@ __all__ = [
     "multi_app_behav_jax",
 ]
 
-MATMUL_IMPLS = ("gemm", "xla", "pallas")
+MATMUL_IMPLS = ("gemm", "xla", "pallas", "entry", "entry_pallas")
+# impls that score straight from the config masks, never building tables
+_ENTRY_IMPLS = ("entry", "entry_pallas")
 
 
 def default_matmul_impl() -> str:
@@ -110,6 +121,7 @@ class TableBatch:
     ctx: ExecutionContext | None = None  # execution policy for the primitives
     _small: jnp.ndarray | None = field(default=None, repr=False)
     _tables: jnp.ndarray | None = field(default=None, repr=False)
+    _entry_small: jnp.ndarray | None = field(default=None, repr=False)
 
     def __len__(self) -> int:
         src = self.masks if self.masks is not None else self._tables
@@ -134,6 +146,22 @@ class TableBatch:
     @property
     def has_small(self) -> bool:
         return self._small is not None or self.masks is not None
+
+    @property
+    def entry_small(self) -> jnp.ndarray:
+        """Per-row planes synthesized on device from the masks (table-free:
+        carry-chain evaluation, no host row-table gather).  Bit-identical to
+        ``small``; cached separately so the entry paths share one synthesis
+        across every app head scoring this batch."""
+        if self._entry_small is None:
+            if self.masks is None:
+                raise ValueError(
+                    "TableBatch built from raw product tables has no config "
+                    "masks; construct it with table_batch(spec, configs) to "
+                    "use the table-free entry paths"
+                )
+            self._entry_small = _synth_small_jax(self.masks, self.n_bits)
+        return self._entry_small
 
     @property
     def tables(self) -> jnp.ndarray:
@@ -287,6 +315,82 @@ def _matmul_take_batched(tables, a, b, d_chunk: int):
     return jax.lax.map(chunk, (tf, af)).reshape(d, m, n)
 
 
+# ---------------------------------------------------------------------------
+# Table-free cores (impl="entry"): per-row gathers from synthesized planes
+# ---------------------------------------------------------------------------
+#
+# Same (M, N, K)-ordered flattened gathers as the impl="xla" cores, but from
+# the device-synthesized (R, D, 4, B) planes instead of the (D, A, B) product
+# tables: out[d, m, n] = sum_r small[r, d, pair_r(a[m, k]), b[k, n]] << 2r.
+# No (D, A, B) intermediate exists at any point, so working-set memory is
+# R * 4 * B ints per config at every operand width.
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "d_chunk"))
+def _matmul_entry_shared(small, a, b, n_bits: int, d_chunk: int):
+    """small (R, D, 4, B); a (M, K); b (K, N) -> (D, M, N) int32."""
+    spec = spec_for(n_bits)
+    nb = spec.n_inputs
+    d = small.shape[1]
+    m, k = a.shape
+    n = b.shape[1]
+    sf = small.transpose(1, 0, 2, 3).reshape(d // d_chunk, d_chunk, spec.rows, -1)
+    idxs = [
+        (
+            ((2 * ((a >> (2 * r)) & 1) + ((a >> (2 * r + 1)) & 1))[:, None, :])
+            * nb
+            + b.T[None, :, :]
+        ).reshape(-1)
+        for r in range(spec.rows)
+    ]  # per-row (M*N*K,) flat indices into the (4*B,) planes
+
+    def chunk(sc):  # (Dc, R, 4B) -> (Dc, M, N)
+        out = None
+        for r in range(spec.rows):
+            prod = jnp.take(sc[:, r], idxs[r], axis=1)
+            term = prod.reshape(d_chunk, m, n, k).sum(axis=-1) << (2 * r)
+            out = term if out is None else out + term
+        return out
+
+    return jax.lax.map(chunk, sf).reshape(d, m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "d_chunk"))
+def _matmul_entry_batched(small, a, b, n_bits: int, d_chunk: int):
+    """small (R, D, 4, B); a (D, M, K) per-config codes; b (K, N) -> (D, M, N)."""
+    spec = spec_for(n_bits)
+    nb = spec.n_inputs
+    d = small.shape[1]
+    _, m, k = a.shape
+    n = b.shape[1]
+    sf = small.transpose(1, 0, 2, 3).reshape(d // d_chunk, d_chunk, spec.rows, -1)
+    af = a.reshape(d // d_chunk, d_chunk, m, k)
+
+    def chunk(args):
+        sc, ac = args
+        out = None
+        for r in range(spec.rows):
+            pair = 2 * ((ac >> (2 * r)) & 1) + ((ac >> (2 * r + 1)) & 1)
+            idx = (pair[:, :, :, None] * nb + b[None, None, :, :]).reshape(
+                d_chunk, -1
+            )
+            prod = jnp.take_along_axis(sc[:, r], idx, axis=1)
+            term = prod.reshape(d_chunk, m, k, n).sum(axis=2) << (2 * r)
+            out = term if out is None else out + term
+        return out
+
+    return jax.lax.map(chunk, (sf, af)).reshape(d, m, n)
+
+
+def _pad_small(small: jnp.ndarray, mult: int) -> jnp.ndarray:
+    """Pad the D axis (axis 1) of (R, D, 4, B) planes with zeros."""
+    pad = (-small.shape[1]) % mult
+    if pad:
+        z = jnp.zeros((small.shape[0], pad) + small.shape[2:], small.dtype)
+        small = jnp.concatenate([small, z], axis=1)
+    return small
+
+
 def _windows_1d(x: jnp.ndarray, k: int) -> jnp.ndarray:
     """(T,) -> (T-k+1, k) valid-mode sliding windows."""
     t = x.shape[0]
@@ -355,6 +459,13 @@ def _resolve_impl(impl: str | None, batch: TableBatch, k: int) -> str:
                 )
             )
         impl = "xla"  # auto-selection falls back to the gather path
+    if impl in _ENTRY_IMPLS and batch.masks is None:
+        if explicit:
+            raise ValueError(
+                f"impl={impl!r} unavailable: TableBatch built from raw tables "
+                "has no config masks to synthesize entries from"
+            )
+        impl = "xla"
     return impl
 
 
@@ -502,6 +613,40 @@ def table_matmul_jax(
             batch.tables.reshape(d, -1), a, b, k_tile=k_tile, interpret=interpret
         )
 
+    if a.ndim == 2 and impl == "entry_pallas":
+        from ..kernels.app_kernels import entry_gemv_pallas
+        from ..kernels.ops import on_tpu
+
+        interpret = (not on_tpu()) if interpret is None else interpret
+        if k_tile is None:
+            k_tile = tiles_for(batch.ctx, "fastapp.entry_pallas",
+                               n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["k_tile"]
+        k_tile = min(k_tile, max(k, 1))
+        pad = (-k) % k_tile
+        if pad:  # zero codes map through entry (0, 0) -> 0: padding is inert
+            a = jnp.concatenate([a, jnp.zeros((a.shape[0], pad), jnp.int32)], axis=1)
+            b = jnp.concatenate([b, jnp.zeros((pad, b.shape[1]), jnp.int32)], axis=0)
+        return entry_gemv_pallas(
+            batch.masks, a, b, batch.n_bits, k_tile=k_tile, interpret=interpret
+        )
+
+    if impl in _ENTRY_IMPLS:
+        # table-free gather path ("entry", or "entry_pallas" with per-config
+        # operand codes, which the GEMV kernel does not cover): chunked
+        # per-row gathers from the device-synthesized planes
+        if d_chunk is None:
+            d_chunk = tiles_for(batch.ctx, "fastapp.entry",
+                                n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["d_chunk"]
+        d_chunk = min(d_chunk, d)
+        sp = _pad_small(batch.entry_small, d_chunk)
+        if a.ndim == 3:
+            out = _matmul_entry_batched(
+                sp, _pad_leading(a, d_chunk), b, batch.n_bits, d_chunk
+            )
+        else:
+            out = _matmul_entry_shared(sp, a, b, batch.n_bits, d_chunk)
+        return out[:d]
+
     if d_chunk is None:
         d_chunk = tiles_for(batch.ctx, "fastapp.xla",
                             n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["d_chunk"]
@@ -540,6 +685,10 @@ def table_conv1d_jax(tables, x_codes, h_codes, impl: str | None = None) -> jnp.n
     h = jnp.asarray(h_codes, jnp.int32)
     impl = _resolve_impl(impl, batch, h.shape[0])
     mesh_ctx = _config_mesh_ctx(batch, len(batch))
+    if impl in _ENTRY_IMPLS and _gemm_ok(h.shape[0], batch.n_bits):
+        # table-free: same flat contract as "gemm", fed by synthesized planes
+        win = _windows_1d(x, h.shape[0])
+        return _contract_gemm_flat(batch.entry_small, win, h, batch.n_bits)
     if impl == "gemm":
         win = _windows_1d(x, h.shape[0])
         if mesh_ctx is not None:
@@ -562,6 +711,15 @@ def table_conv2d_jax(
     impl = _resolve_impl(impl, batch, int(kern.size))
     d = len(batch)
     mesh_ctx = _config_mesh_ctx(batch, d)
+    if impl in _ENTRY_IMPLS and _gemm_ok(int(kern.size), batch.n_bits):
+        kh, kw = kern.shape
+        win = _windows_2d(img, kh, kw)
+        oy, ox = win.shape[0], win.shape[1]
+        out = _contract_gemm_flat(
+            batch.entry_small, win.reshape(oy * ox, kh * kw),
+            kern.reshape(-1), batch.n_bits,
+        )
+        return out.reshape(d, oy, ox)
     if impl == "gemm":
         kh, kw = kern.shape
         win = _windows_2d(img, kh, kw)

@@ -25,6 +25,39 @@ def _gelu(x: np.ndarray) -> np.ndarray:
     return 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * (x * x * x))))
 
 
+_DEVICE_REQUANT = None
+
+
+def _gelu_requant_jax():
+    """Jitted float32 GeLU + per-config symmetric quantizer (lazy JAX import).
+
+    Mirrors ``_gelu`` + ``quantize_int8`` for a (D, T, F) batch of GEMM1
+    integer outputs: returns masked int32 codes and the per-config scales.
+    """
+    global _DEVICE_REQUANT
+    if _DEVICE_REQUANT is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("n_bits",))
+        def fn(h_int, scale, n_bits: int):
+            h = h_int.astype(jnp.float32) * scale
+            c = jnp.float32(np.sqrt(2.0 / np.pi))
+            h = 0.5 * h * (1.0 + jnp.tanh(c * (h + 0.044715 * (h * h * h))))
+            qmax = (1 << (n_bits - 1)) - 1
+            amax = jnp.abs(h).max(axis=(1, 2))
+            sh = jnp.where(amax > 0, amax / qmax, 1.0)
+            q = jnp.clip(
+                jnp.round(h / sh[:, None, None]), -qmax - 1, qmax
+            ).astype(jnp.int32)
+            return q & ((1 << n_bits) - 1), sh
+
+        _DEVICE_REQUANT = fn
+    return _DEVICE_REQUANT
+
+
 @dataclass
 class TransformerFFN(AxOApplication):
     name: str = "ffn"
@@ -32,6 +65,14 @@ class TransformerFFN(AxOApplication):
     d_ff: int = 128
     n_tokens: int = 96
     seed: int = 17
+    # "host": GeLU + per-config requantization in host float64, bit-identical
+    # to the numpy oracle.  "device": the whole GEMM1 -> GeLU -> requant ->
+    # GEMM2 chain stays on device in float32 -- no (D, T, F) host round-trip
+    # between the GEMMs, composing with the table-free entry impls.  Device
+    # float32 rounds a handful of hidden codes differently near .5 rounding
+    # boundaries, so BEHAV agrees to a documented tolerance (see
+    # ``behav_jax_from_tables``), not bitwise.
+    requant: str = "host"
 
     _x: np.ndarray = field(init=False, repr=False)
     _w1: np.ndarray = field(init=False, repr=False)
@@ -87,13 +128,23 @@ class TransformerFFN(AxOApplication):
         return out
 
     def behav_jax_from_tables(self, tables) -> np.ndarray:
-        """Both GEMMs on device; GeLU + per-config requantization on the host.
+        """Both GEMMs on device; GeLU + per-config requantization per ``requant``.
 
-        The intermediate quantization scale depends on each config's hidden
-        activations, so it runs in host float64 exactly like the oracle's
-        ``quantize_int8`` -- keeping the second GEMM's input codes, and hence
-        the final integer outputs, bit-identical.  The per-config hidden codes
-        take ``table_matmul_jax``'s batched-codes path.
+        ``requant="host"`` (default): the intermediate quantization scale
+        depends on each config's hidden activations, so it runs in host
+        float64 exactly like the oracle's ``quantize_int8`` -- keeping the
+        second GEMM's input codes, and hence the final integer outputs,
+        bit-identical.  ``requant="device"``: GeLU and the per-config
+        symmetric quantizer run jitted in float32 and the (D, T, F) hidden
+        tensor never leaves the device between the GEMMs -- composing with
+        the table-free ``entry``/``entry_pallas`` impls so the whole chain
+        runs without a product-table build.  Tolerance story: float32 can
+        round an isolated hidden code one step differently where
+        ``h / scale`` lands within a float32 ulp of a .5 boundary, so BEHAV
+        agrees with the host path to ~1e-3 percentage points (asserted at
+        atol=2e-2 in tests/test_fastapp.py), not bitwise.  Either way the
+        per-config hidden codes take ``table_matmul_jax``'s batched-codes
+        path.
         """
         from .fastapp import _as_batch, table_matmul_jax  # lazy JAX import
 
@@ -104,18 +155,24 @@ class TransformerFFN(AxOApplication):
         ref = self._ref_out
         denom = float(np.linalg.norm(ref)) or 1.0
 
-        h = np.asarray(
-            table_matmul_jax(batch, self._x_codes, self._w1_codes)
-        ).astype(np.float64)
-        h = _gelu(h * (self._sx * self._s1))                    # (D, T, F)
-        d = h.shape[0]
-        h_codes = np.empty(h.shape, dtype=np.int32)  # device dtype, exact codes
-        sh = np.empty(d, dtype=np.float64)
-        for i in range(d):  # per-config scales, exactly the oracle's quantizer
-            h_codes[i], sh[i] = quantize_int8(h[i], n_bits=n_bits)
+        h_int = table_matmul_jax(batch, self._x_codes, self._w1_codes)
+        if self.requant == "device":
+            h_codes, sh = _gelu_requant_jax()(
+                h_int, float(self._sx * self._s1), n_bits
+            )
+            sh = np.asarray(sh, dtype=np.float64)
+        else:
+            h = np.asarray(h_int).astype(np.float64)
+            h = _gelu(h * (self._sx * self._s1))                # (D, T, F)
+            d = h.shape[0]
+            h_codes = np.empty(h.shape, dtype=np.int32)  # device dtype, exact
+            sh = np.empty(d, dtype=np.float64)
+            for i in range(d):  # per-config scales, exactly the oracle's
+                h_codes[i], sh[i] = quantize_int8(h[i], n_bits=n_bits)
         y = np.asarray(
             table_matmul_jax(batch, h_codes, self._w2_codes)
         ).astype(np.float64)
+        d = y.shape[0]
         y *= (sh * self._s2)[:, None, None]
         return np.array(
             [100.0 * float(np.linalg.norm(y[i] - ref)) / denom for i in range(d)],

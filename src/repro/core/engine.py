@@ -17,8 +17,9 @@ every engine:
     independent (seed x const_sf) axis of ``fastmoo.CompiledNSGA2.run_sweep``);
   * ``kernel_impl`` -- preferred kernel implementation where an engine offers a
     menu; the menus live in the kernel registry (``repro.kernels.registry``:
-    ``fastchar``: xla/pallas; ``fastapp``: gemm/xla/pallas; ``fastmoo`` rank
-    kernel: xla/pallas) and :meth:`ExecutionContext.resolve_impl` resolves a
+    ``fastchar``: xla/pallas/entry/entry_pallas; ``fastapp``:
+    gemm/xla/pallas/entry/entry_pallas; ``fastmoo`` rank kernel: xla/pallas)
+    and :meth:`ExecutionContext.resolve_impl` resolves a
     preference against an engine's registered menu; engines fall back to
     their own default when the named impl is not on their menu;
   * ``tuning`` -- block-shape autotune policy for the registered kernels
@@ -74,7 +75,9 @@ __all__ = [
 ]
 
 BACKENDS = ("numpy", "jax")
-KERNEL_IMPLS = ("xla", "pallas", "gemm")
+# "entry"/"entry_pallas" are the table-free engines: product entries are
+# synthesized on device from the LUT config masks (no HBM table build).
+KERNEL_IMPLS = ("xla", "pallas", "gemm", "entry", "entry_pallas")
 SHARD_AXES = ("configs", "lanes")
 PRNG_IMPLS = ("threefry2x32", "rbg", "unsafe_rbg")
 TUNING_POLICIES = ("off", "cached", "search")

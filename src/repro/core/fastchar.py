@@ -40,6 +40,7 @@ only import it lazily when a caller passes ``backend="jax"``.
 from __future__ import annotations
 
 import functools
+import math
 
 import numpy as np
 
@@ -51,8 +52,12 @@ from .metrics import BEHAV_METRICS
 from ..obs import telemetry as obs
 from .operator_model import (
     OperatorSpec,
+    _entry_product,
+    _entry_row_values,
+    _synth_small,
     config_to_masks,
     exact_product_table,
+    exact_table,
     row_tables,
     spec_for,
 )
@@ -60,14 +65,21 @@ from .operator_model import (
 __all__ = [
     "max_abs_error_bound",
     "default_a_tile",
+    "entry_fn",
     "behav_partials",
     "behav_metrics_jax",
+    "behav_metrics_sampled",
     "surrogate_objs_device",
     "compile_surrogate_batch",
     "map_problem_values_jax",
     "tabu_neighbor_values_jax",
     "tabu_neighbor_values_multi_jax",
 ]
+
+# Exhaustive engine menu: "xla"/"pallas" gather the per-row tables out of the
+# precomputed RowTables; "entry"/"entry_pallas" are the table-free twins that
+# synthesize them on device from the (D, R) config masks (no HBM table build).
+CHAR_IMPLS = ("xla", "pallas", "entry", "entry_pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +90,8 @@ __all__ = [
 def max_abs_error_bound(spec: OperatorSpec) -> int:
     """Static bound on ``|approx - exact|`` for any config and input pair."""
     row_mag = 1 << (spec.width - 1)
+    if spec.op == "add":
+        return row_mag + (1 << spec.n_bits)
     approx = row_mag * ((4**spec.rows - 1) // 3)
     exact = 1 << (2 * spec.n_bits - 2)
     return approx + exact
@@ -131,19 +145,41 @@ def _gather_small(masks: jnp.ndarray, n_bits: int) -> jnp.ndarray:
     return jnp.stack(smalls)                               # (R, D, 4, B)
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "a_tile", "d_block"))
-def _partials_xla(masks: jnp.ndarray, n_bits: int, a_tile: int, d_block: int):
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _synth_small_jax(masks: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Table-free twin of ``_gather_small``: carry-chain synthesis from masks.
+
+    (D, R) masks -> (R, D, 4, B) int32, bit-identical to the RowTables gather
+    but with no host table build and no (2, 4, B, 2^(N+1)) constant staged to
+    the device -- R*4*B*W lane-ops per config instead.
+    """
+    spec = spec_for(n_bits)
+    smalls = _synth_small(spec, masks, jnp, jnp.int32)     # R x (D, 4, B)
+    return jnp.stack(smalls)                               # (R, D, 4, B)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "a_tile", "d_block", "source"))
+def _partials_xla(masks: jnp.ndarray, n_bits: int, a_tile: int, d_block: int,
+                  source: str = "table"):
     """XLA twin of the Pallas kernel: same tiling, same output channels.
 
     A ``lax.map`` over ``d_block``-sized config chunks keeps the reconstructed
     error tables cache-resident (a (Db, 2^N, 2^N) int32 chunk is ~2 MB at N=8
     vs 67 MB for the whole batch) while the whole batch remains one device
     dispatch -- this is worth ~4x over the naive vectorized form on CPU hosts.
+
+    ``source`` picks where the per-row small tables come from: ``"table"``
+    gathers them from the precomputed RowTables, ``"entry"`` synthesizes them
+    from the masks inside the same program (the table-free engine).  The
+    reduction is identical, so both are bit-exact vs the numpy oracle.
     """
     obs.note_trace("fastchar.partials_xla")  # body executes once per (re)trace
     spec = spec_for(n_bits)
     _, exact, w, pair_idx = _device_tables(n_bits)
-    small = _gather_small(masks, n_bits)                   # (R, D, 4, B)
+    if source == "entry":
+        small = _synth_small_jax(masks, n_bits)            # (R, D, 4, B)
+    else:
+        small = _gather_small(masks, n_bits)               # (R, D, 4, B)
     d = small.shape[1]
     n_in = spec.n_inputs
     n_ta = n_in // a_tile
@@ -193,10 +229,19 @@ def _partials_dispatch(n_bits: int, impl: str, a_tile: int, d_block: int,
     def dispatch(m):
         if impl == "xla":
             return _partials_xla(m, n_bits, a_tile, d_block)
-        from ..kernels.char_kernels import behav_stats_pallas
+        if impl == "entry":
+            return _partials_xla(m, n_bits, a_tile, d_block, source="entry")
         from ..kernels.ops import on_tpu
 
         interp = (not on_tpu()) if interpret is None else interpret
+        if impl == "entry_pallas":
+            from ..kernels.char_kernels import behav_stats_entry_pallas
+
+            return behav_stats_entry_pallas(
+                m, n_bits, d_block=d_block, a_tile=a_tile, interpret=interp
+            )
+        from ..kernels.char_kernels import behav_stats_pallas
+
         _, exact, w, _ = _device_tables(n_bits)
         small = _gather_small(m, n_bits)
         return behav_stats_pallas(
@@ -255,7 +300,7 @@ def behav_partials(
     (n_ta, D, 8) partials are bit-identical to the unsharded dispatch (the
     int64 host combine is unchanged).
     """
-    if impl not in ("xla", "pallas"):
+    if impl not in CHAR_IMPLS:
         raise ValueError(f"unknown fastchar impl {impl!r}")
     obs.of(ctx).count(f"dispatch.fastchar.{impl}")
     masks = jnp.asarray(masks)
@@ -331,8 +376,15 @@ def behav_metrics_jax(
         from ..kernels.ops import on_tpu
 
         impl = "pallas" if on_tpu() else "xla"
-    if impl not in ("xla", "pallas"):
+    if impl not in CHAR_IMPLS:
         raise ValueError(f"unknown fastchar impl {impl!r}")
+    if spec.op != "mul" or spec.n_bits > 8:
+        raise ValueError(
+            f"exhaustive device characterization supports signed multipliers "
+            f"up to 8 bits (got op={spec.op!r}, n_bits={spec.n_bits}): the "
+            f"(D, 2^N, 2^N) working set / int32 tile partials do not fit -- "
+            f"use behav_metrics_sampled for wider operators"
+        )
     configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
     d = configs.shape[0]
     masks = config_to_masks(spec, configs).astype(np.int32)
@@ -366,6 +418,181 @@ def behav_metrics_jax(
             for k in BEHAV_METRICS:
                 out[k][lo_i:hi_i] = part[k]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Table-free entry function + sampled/streamed characterization (12/16-bit)
+# ---------------------------------------------------------------------------
+
+
+def entry_fn(spec: OperatorSpec):
+    """jittable ``fn(config, a, b) -> product`` device function for one family.
+
+    ``config`` is the (L,) {0,1} LUT tuple; ``a``/``b`` are int32
+    two's-complement codes (equivalently signed operand values -- negative
+    int32 inputs carry the same low bits) of any mutually broadcastable shape.
+    Every product entry is synthesized from the carry-chain model on device;
+    there is no table anywhere.  Exact in int32 for adders at any supported
+    width and multipliers up to N=14; 16-bit multiplier *products* can exceed
+    int32, so that family must stream per-row values instead (see
+    ``behav_metrics_sampled``).
+    """
+    if spec.op == "mul" and spec.n_bits > 14:
+        raise ValueError(
+            f"{spec.n_bits}-bit multiplier products overflow int32; use the "
+            f"streamed per-row path (behav_metrics_sampled)"
+        )
+    cpr = spec.cols_removable
+
+    @jax.jit
+    def fn(config, a, b):
+        c = config.astype(jnp.int32).reshape(spec.rows, cpr)
+        shifts = jnp.arange(cpr, dtype=jnp.int32)
+        masks = (c << shifts[None, :]).sum(axis=1)         # (R,)
+        return _entry_product(
+            spec, masks, jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32),
+            jnp, jnp.int32,
+        )
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "op"))
+def _sampled_row_values(masks, a_codes, b_codes, n_bits: int, op: str):
+    """(D, R) masks x (S,) code samples -> (D, S, R) int32 per-row values.
+
+    The device half of the streamed reduction: row values always fit int32, so
+    the host can combine ``sum_r vals << 2r`` exactly in int64 even for 16-bit
+    multipliers whose products overflow int32.
+    """
+    obs.note_trace("fastchar.sampled_rows")
+    spec = spec_for(n_bits, op)
+    vals = _entry_row_values(
+        spec, masks[:, None, :], a_codes[None, :], b_codes[None, :],
+        jnp, jnp.int32,
+    )
+    d, s = masks.shape[0], a_codes.shape[0]
+    return jnp.stack([jnp.broadcast_to(v, (d, s)) for v in vals], axis=-1)
+
+
+def behav_metrics_sampled(
+    spec: OperatorSpec,
+    configs: np.ndarray,
+    n_samples: int = 32768,
+    seed: int = 0,
+    s_block: int = 4096,
+    b_block: int = 512,
+    n_boot: int = 200,
+    ci_level: float = 0.95,
+    ctx: ExecutionContext | None = None,
+) -> tuple[dict[str, np.ndarray], dict[str, tuple[np.ndarray, np.ndarray]]]:
+    """Monte-Carlo BEHAV metrics for operators too wide for the exhaustive path.
+
+    Draws ``n_samples`` (rounded up to whole ``s_block`` chunks) input pairs
+    uniformly with replacement -- *shared across configs* (common random
+    numbers, so config deltas are low-variance) -- and streams them through the
+    table-free entry function in ``(D, s_block)`` chunks: device memory is
+    bounded by ``D * s_block * R`` int32 regardless of bitwidth (no
+    ``(D, 2^N, 2^N)`` anything).  The device returns per-row int32 values; the
+    host combines products and errors exactly in int64 (at 16-bit-mul the
+    squared errors can exceed int64, so MSE accumulates in float64 there --
+    every other width keeps the exact integer accounting of the exhaustive
+    combine).
+
+    Returns ``(metrics, ci)``: ``metrics`` has the BEHAV_METRICS keys
+    (estimates of the exhaustive values; MAX_ABS_ERR is a sample max, i.e. a
+    lower bound); ``ci`` maps each mean-type metric to a ``(lo, hi)`` pair of
+    (D,) arrays -- a ``ci_level`` percentile block-bootstrap interval over
+    partial sums at ``b_block``-sample granularity (``n_boot`` resamples of
+    the block axis; ``b_block`` is accounting-only and does not change the
+    device dispatch size ``s_block`` or the point estimates).  Caveat: the
+    relative-error channel is heavy-tailed (|err| / max(|exact|, 1) spikes
+    where the exact product is near zero), so its percentile interval
+    undercovers at small sample counts -- treat it as a diagnostic band, not
+    a guarantee; the absolute-error channels are well-behaved.
+    """
+    configs = np.atleast_2d(np.asarray(configs)).astype(np.uint8)
+    d = configs.shape[0]
+    masks = jnp.asarray(config_to_masks(spec, configs).astype(np.int32))
+    n_chunks = max(1, -(-n_samples // s_block))
+    total = n_chunks * s_block
+
+    rng = np.random.default_rng(seed)
+    a_codes = rng.integers(0, spec.n_inputs, size=total).astype(np.int32)
+    b_codes = rng.integers(0, spec.n_inputs, size=total).astype(np.int32)
+    half = spec.n_inputs // 2
+    a_s = np.where(a_codes >= half, a_codes.astype(np.int64) - 2 * half, a_codes)
+    b_s = np.where(b_codes >= half, b_codes.astype(np.int64) - 2 * half, b_codes)
+    exact = a_s + b_s if spec.op == "add" else a_s * b_s   # int64, exact
+    denom = np.maximum(np.abs(exact), 1).astype(np.float64)
+
+    bound = max_abs_error_bound(spec)
+    sq_exact = bound * bound * total < (1 << 62)           # int64-exact totals
+
+    # bootstrap accounting blocks: finer than the device chunks (a percentile
+    # bootstrap over n_chunks ~ 8 blocks is far too coarse), always dividing
+    # s_block so each device chunk contributes whole blocks
+    b_block = math.gcd(s_block, max(1, b_block))
+    n_sub = s_block // b_block
+    n_blocks = n_chunks * n_sub
+
+    p_abs = np.empty((n_blocks, d), np.int64)
+    p_cnt = np.empty((n_blocks, d), np.int64)
+    p_max = np.empty((n_chunks, d), np.int64)
+    p_sq = np.empty((n_blocks, d), np.int64 if sq_exact else np.float64)
+    p_rel = np.empty((n_blocks, d), np.float64)
+    with obs.of(ctx).span("fastchar.behav_sampled", d=d, n=total,
+                          n_bits=spec.n_bits, op=spec.op):
+        for c in range(n_chunks):
+            sl = slice(c * s_block, (c + 1) * s_block)
+            vals = np.asarray(
+                _sampled_row_values(
+                    masks, jnp.asarray(a_codes[sl]), jnp.asarray(b_codes[sl]),
+                    spec.n_bits, spec.op,
+                ),
+                dtype=np.int64,
+            )                                              # (D, s, R)
+            approx = vals[..., 0]
+            for r in range(1, spec.rows):
+                approx = approx + (vals[..., r] << (2 * r))
+            abs_e = np.abs(approx - exact[None, sl])       # (D, s) int64
+            blk = slice(c * n_sub, (c + 1) * n_sub)
+            by_block = abs_e.reshape(d, n_sub, b_block)
+            p_abs[blk] = by_block.sum(axis=2).T
+            p_cnt[blk] = (by_block != 0).sum(axis=2).T
+            p_max[c] = abs_e.max(axis=1)
+            sq = by_block * by_block if sq_exact \
+                else by_block.astype(np.float64) ** 2
+            p_sq[blk] = sq.sum(axis=2).T
+            p_rel[blk] = (
+                (abs_e / denom[None, sl]).reshape(d, n_sub, b_block)
+                .sum(axis=2).T
+            )
+
+    inv = 1.0 / total
+    metrics = {
+        "AVG_ABS_ERR": p_abs.sum(axis=0).astype(np.float64) * inv,
+        "AVG_ABS_REL_ERR": 100.0 * p_rel.sum(axis=0) * inv,
+        "PROB_ERR": 100.0 * p_cnt.sum(axis=0).astype(np.float64) * inv,
+        "MAX_ABS_ERR": p_max.max(axis=0).astype(np.float64),
+        "MSE": p_sq.sum(axis=0).astype(np.float64) * inv,
+    }
+
+    boot_rng = np.random.default_rng(seed + 1)
+    idx = boot_rng.integers(0, n_blocks, size=(n_boot, n_blocks))
+    q_lo, q_hi = 100.0 * (1 - ci_level) / 2, 100.0 * (1 + ci_level) / 2
+
+    def _boot(partials, scale):
+        est = partials[idx].sum(axis=1).astype(np.float64) * (scale * inv)
+        return (np.percentile(est, q_lo, axis=0), np.percentile(est, q_hi, axis=0))
+
+    ci = {
+        "AVG_ABS_ERR": _boot(p_abs, 1.0),
+        "AVG_ABS_REL_ERR": _boot(p_rel, 100.0),
+        "PROB_ERR": _boot(p_cnt, 100.0),
+        "MSE": _boot(p_sq, 1.0),
+    }
+    return metrics, ci
 
 
 # ---------------------------------------------------------------------------

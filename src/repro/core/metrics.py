@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .operator_model import OperatorSpec, exact_product_table, product_tables
+from .operator_model import OperatorSpec, exact_table, product_tables
 
 BEHAV_METRICS = ("AVG_ABS_ERR", "AVG_ABS_REL_ERR", "PROB_ERR", "MAX_ABS_ERR", "MSE")
 
@@ -43,7 +43,7 @@ def behav_metrics(
         return behav_metrics_jax(spec, configs, batch_size=batch_size, ctx=ctx)
     configs = np.atleast_2d(np.asarray(configs))
     d = configs.shape[0]
-    exact = exact_product_table(spec.n_bits).astype(np.int64)
+    exact = exact_table(spec)
     denom = np.maximum(np.abs(exact), 1).astype(np.float64)
 
     out = {k: np.empty(d, dtype=np.float64) for k in BEHAV_METRICS}

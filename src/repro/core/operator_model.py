@@ -24,6 +24,22 @@ Removal of column ``j`` in a row forces ``sum_j = 0`` and ``carry_{j+1} = 0``.
 Everything is vectorized through a precomputed "row table" over
 ``(top?, a0, a1, B, row_mask)`` so that characterizing thousands of configs over all
 ``2^{2N}`` input pairs is a handful of numpy gathers.
+
+Beyond the paper's 8x8 signed multiplier (the AxOSyn generalization), the model
+is parameterized over operator kind via ``OperatorSpec.op``:
+
+  * ``op="mul"`` -- the row-paired signed multiplier above (any even N).
+  * ``op="add"`` -- a signed N-bit carry-chain adder: a single row of width
+    ``W = N+1`` adding ``A + B`` with columns ``0..N-1`` removable (the top
+    sign column is always accurate), so ``L = N``.
+
+The config -> product mapping is also exposed as a *device function*
+(:func:`entry_product` / the ``xp``-generic ``_entry_product``): given the per-row
+masks it synthesizes any ``(a, b)`` entry of the product table directly from the
+carry-chain model, with no precomputed table.  This is what lets kernels
+reconstruct their VMEM tile from the ``(D, L)`` config bits instead of gathering
+from an HBM-resident ``(D, 2^N, 2^N)`` table -- the only viable route at 12/16
+bits, where that table cannot be materialized at all.
 """
 
 from __future__ import annotations
@@ -43,28 +59,45 @@ __all__ = [
     "accurate_config",
     "product_tables",
     "exact_product_table",
+    "exact_table",
+    "entry_product",
+    "entry_row_values",
     "error_tables",
     "simulate_product",
 ]
 
+OPERATOR_KINDS = ("mul", "add")
+
 
 @dataclass(frozen=True)
 class OperatorSpec:
-    """Static description of one signed multiplier operator family."""
+    """Static description of one signed approximate-operator family."""
 
     n_bits: int                       # operand width N (signed)
-    rows: int = field(init=False)     # number of partial-product rows R = N/2
-    width: int = field(init=False)    # per-row adder width W = N + 2
-    cols_removable: int = field(init=False)  # removable columns per row = N + 1
-    n_luts: int = field(init=False)   # total removable LUTs L = R * (N+1)
+    op: str = "mul"                   # operator kind: "mul" | "add"
+    rows: int = field(init=False)     # partial-product rows (R = N/2 mul, 1 add)
+    width: int = field(init=False)    # per-row adder width (N+2 mul, N+1 add)
+    cols_removable: int = field(init=False)  # removable columns per row
+    n_luts: int = field(init=False)   # total removable LUTs L
 
     def __post_init__(self) -> None:
-        if self.n_bits % 2 != 0 or self.n_bits < 2:
-            raise ValueError(f"n_bits must be even and >= 2, got {self.n_bits}")
-        object.__setattr__(self, "rows", self.n_bits // 2)
-        object.__setattr__(self, "width", self.n_bits + 2)
-        object.__setattr__(self, "cols_removable", self.n_bits + 1)
-        object.__setattr__(self, "n_luts", self.rows * (self.n_bits + 1))
+        if self.op not in OPERATOR_KINDS:
+            raise ValueError(f"op must be one of {OPERATOR_KINDS}, got {self.op!r}")
+        if self.op == "mul":
+            if self.n_bits % 2 != 0 or self.n_bits < 2:
+                raise ValueError(
+                    f"n_bits must be even and >= 2 for op='mul', got {self.n_bits}"
+                )
+            object.__setattr__(self, "rows", self.n_bits // 2)
+            object.__setattr__(self, "width", self.n_bits + 2)
+            object.__setattr__(self, "cols_removable", self.n_bits + 1)
+        else:  # add: one carry chain of width N+1, sign column accurate
+            if self.n_bits < 2:
+                raise ValueError(f"n_bits must be >= 2, got {self.n_bits}")
+            object.__setattr__(self, "rows", 1)
+            object.__setattr__(self, "width", self.n_bits + 1)
+            object.__setattr__(self, "cols_removable", self.n_bits)
+        object.__setattr__(self, "n_luts", self.rows * self.cols_removable)
 
     @property
     def n_inputs(self) -> int:
@@ -83,8 +116,8 @@ class OperatorSpec:
 
 
 @functools.lru_cache(maxsize=None)
-def spec_for(n_bits: int) -> OperatorSpec:
-    return OperatorSpec(n_bits)
+def spec_for(n_bits: int, op: str = "mul") -> OperatorSpec:
+    return OperatorSpec(n_bits, op)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +245,150 @@ def accurate_config(spec: OperatorSpec) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Table-free entry synthesis (config -> product as a device function)
+# ---------------------------------------------------------------------------
+#
+# ``xp`` is the array module (numpy or jax.numpy): the same code is the numpy
+# oracle (int64, exact at any width) and the traced device function (int32 --
+# exact for every intermediate as long as the *row values* fit, i.e. any
+# supported width; the combined product additionally fits int32 for mul up to
+# N=14 and add at any width; 16-bit multiplies must stream the per-row values
+# and combine them host-side in int64, see ``entry_row_values``).
+
+
+def _chain_eval(t1, t2, mask, w: int, cpr: int, xp, dtype):
+    """Carry-truncated ``W``-bit add of ``t1 + t2`` under a per-column keep mask.
+
+    ``t1``/``t2`` are W-bit unsigned patterns, ``mask`` the per-row integer
+    keep-mask (bit ``j`` keeps column ``j``; columns ``>= cpr`` are always
+    kept).  Broadcasts over any common shape; returns the signed W-bit value.
+    """
+    t1 = t1.astype(dtype)
+    t2 = t2.astype(dtype)
+    mask = mask.astype(dtype)
+    shape = np.broadcast_shapes(np.shape(t1), np.shape(t2), np.shape(mask))
+    s = xp.zeros(shape, dtype)
+    c = xp.zeros(shape, dtype)
+    for j in range(w):
+        t1j = (t1 >> j) & 1
+        t2j = (t2 >> j) & 1
+        p = t1j ^ t2j
+        g = t1j & t2j
+        sj = p ^ c
+        c_next = xp.where(p == 1, c, g)
+        if j < cpr:
+            kept = (mask >> j) & 1
+            sj = sj * kept
+            c_next = c_next * kept
+        s = s | (sj << j)
+        c = c_next
+    sign = 1 << (w - 1)
+    return xp.where((s & sign) != 0, s - (1 << w), s)
+
+
+def _entry_row_values(spec: OperatorSpec, masks, a_codes, b_codes, xp, dtype):
+    """Per-row signed values of the approximate op at ``(a, b)``, pre-shift.
+
+    ``masks[..., r]`` must broadcast against ``a_codes``/``b_codes`` (two's
+    complement input codes).  Returns a list of ``spec.rows`` arrays; the full
+    product is ``sum_r vals[r] << 2r`` (mul) / ``vals[0]`` (add).  Row values
+    fit int32 at every supported width, which is what makes this the streaming
+    payload for 16-bit multipliers.
+    """
+    n, w, cpr = spec.n_bits, spec.width, spec.cols_removable
+    half = spec.n_inputs // 2
+    modw = (1 << w) - 1
+    a = a_codes.astype(dtype)
+    b = b_codes.astype(dtype)
+    a_s = xp.where(a >= half, a - 2 * half, a)
+    b_s = xp.where(b >= half, b - 2 * half, b)
+    if spec.op == "add":
+        return [
+            _chain_eval(a_s & modw, b_s & modw, masks[..., 0], w, cpr, xp, dtype)
+        ]
+    vals = []
+    for r in range(spec.rows):
+        top = r == spec.rows - 1
+        a0 = (a >> (2 * r)) & 1
+        a1 = (a >> (2 * r + 1)) & 1
+        t1 = xp.where(a0 == 1, b_s & modw, 0)
+        bx = -b_s if top else b_s
+        t2 = xp.where(a1 == 1, (bx << 1) & modw, 0)
+        vals.append(_chain_eval(t1, t2, masks[..., r], w, cpr, xp, dtype))
+    return vals
+
+
+def _entry_product(spec: OperatorSpec, masks, a_codes, b_codes, xp, dtype):
+    """Full approximate product/sum from per-row masks (``xp``-generic)."""
+    vals = _entry_row_values(spec, masks, a_codes, b_codes, xp, dtype)
+    total = vals[0]
+    for r in range(1, spec.rows):
+        total = total + (vals[r] << (2 * r))
+    return total
+
+
+def entry_product(spec: OperatorSpec, masks, a_codes, b_codes) -> np.ndarray:
+    """Numpy oracle of the table-free entry function (int64, exact any width).
+
+    ``masks``: (..., R) per-row masks; ``a_codes``/``b_codes``: two's-complement
+    input codes broadcasting against ``masks[..., r]``.
+    """
+    return _entry_product(
+        spec,
+        np.asarray(masks, dtype=np.int64),
+        np.asarray(a_codes, dtype=np.int64),
+        np.asarray(b_codes, dtype=np.int64),
+        np,
+        np.int64,
+    )
+
+
+def entry_row_values(spec: OperatorSpec, masks, a_codes, b_codes) -> np.ndarray:
+    """Numpy twin of the streamed per-row payload: (..., R) int64 row values."""
+    vals = _entry_row_values(
+        spec,
+        np.asarray(masks, dtype=np.int64),
+        np.asarray(a_codes, dtype=np.int64),
+        np.asarray(b_codes, dtype=np.int64),
+        np,
+        np.int64,
+    )
+    return np.stack(np.broadcast_arrays(*vals), axis=-1)
+
+
+def _synth_small(spec: OperatorSpec, masks, xp, dtype):
+    """Per-row small tables synthesized from masks: list of (..., 4, B) arrays.
+
+    ``small[r][..., p, b] `` is row ``r``'s value for multiplier-bit pair
+    ``p = 2*a0 + a1`` and operand code ``b`` -- the same ``(4, B)`` layout the
+    table-build path gathers out of ``RowTables``, but computed from the
+    ``(..., R)`` masks by ``R * 4`` carry-chain evaluations over the B axis
+    (``R*4*B*W`` lane-ops total, vs materializing/gathering a
+    ``(2, 4, B, 2^(N+1))`` HBM table).  mul only.
+    """
+    if spec.op != "mul":
+        raise ValueError(f"_synth_small is mul-only, got op={spec.op!r}")
+    w, cpr = spec.width, spec.cols_removable
+    n_in = spec.n_inputs
+    modw = (1 << w) - 1
+    b_s = xp.arange(n_in, dtype=dtype)
+    b_s = xp.where(b_s >= n_in // 2, b_s - n_in, b_s)
+    smalls = []
+    for r in range(spec.rows):
+        top = r == spec.rows - 1
+        bx = -b_s if top else b_s
+        mask_r = masks[..., r][..., None]  # broadcast over the B axis
+        planes = []
+        for p in range(4):
+            a0, a1 = (p >> 1) & 1, p & 1
+            t1 = (b_s & modw) if a0 else xp.zeros_like(b_s)
+            t2 = ((bx << 1) & modw) if a1 else xp.zeros_like(b_s)
+            planes.append(_chain_eval(t1, t2, mask_r, w, cpr, xp, dtype))
+        smalls.append(xp.stack(planes, axis=-2))  # (..., 4, B)
+    return smalls
+
+
+# ---------------------------------------------------------------------------
 # Product / error tables
 # ---------------------------------------------------------------------------
 
@@ -224,6 +401,15 @@ def exact_product_table(n_bits: int) -> np.ndarray:
     return np.multiply.outer(v, v).astype(np.int32)
 
 
+@functools.lru_cache(maxsize=None)
+def exact_table(spec: OperatorSpec) -> np.ndarray:
+    """(2^N, 2^N) int64 exact results of ``spec.op``, two's-complement indexed."""
+    v = spec.operand_values
+    if spec.op == "add":
+        return np.add.outer(v, v).astype(np.int64)
+    return np.multiply.outer(v, v).astype(np.int64)
+
+
 def product_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
     """Approximate product tables for a batch of configs.
 
@@ -234,6 +420,12 @@ def product_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
       axis 2 operand B's.
     """
     configs = np.atleast_2d(np.asarray(configs))
+    if spec.op == "add":
+        masks = config_to_masks(spec, configs)            # (D, 1)
+        codes = np.arange(spec.n_inputs, dtype=np.int64)
+        return entry_product(
+            spec, masks[:, None, None, :], codes[:, None], codes[None, :]
+        ).astype(np.int32)
     tabs = row_tables(spec.n_bits)
     masks = config_to_masks(spec, configs)  # (D, R)
     n_in = spec.n_inputs
@@ -259,7 +451,7 @@ def error_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
     """approx - exact, (D, 2^N, 2^N) int32."""
     return (
         product_tables(spec, configs).astype(np.int64)
-        - exact_product_table(spec.n_bits)[None].astype(np.int64)
+        - exact_table(spec)[None]
     ).astype(np.int32)
 
 
@@ -269,7 +461,7 @@ def error_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
 
 
 def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> int:
-    """Bit-level simulation of one multiply, independent of the table machinery."""
+    """Bit-level simulation of one op, independent of the table machinery."""
     config = np.asarray(config).astype(np.int64)
     n, w = spec.n_bits, spec.width
     half = 1 << (n - 1)
@@ -277,6 +469,25 @@ def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> 
         raise ValueError("operand out of range")
     cpr = spec.cols_removable
     modw = (1 << w) - 1
+    if spec.op == "add":
+        s = 0
+        c = 0
+        t1, t2 = a & modw, b & modw
+        for j in range(w):
+            t1j = (t1 >> j) & 1
+            t2j = (t2 >> j) & 1
+            p = t1j ^ t2j
+            g = t1j & t2j
+            sj = p ^ c
+            c_next = c if p else g
+            if j < cpr and config[j] == 0:
+                sj = 0
+                c_next = 0
+            s |= sj << j
+            c = c_next
+        if s & (1 << (w - 1)):
+            s -= 1 << w
+        return int(s)
     total = 0
     for r in range(spec.rows):
         top = r == spec.rows - 1

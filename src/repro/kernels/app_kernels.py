@@ -49,8 +49,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import registry
+from ..core.operator_model import _chain_eval, spec_for
 
-__all__ = ["table_gemv_pallas"]
+__all__ = ["table_gemv_pallas", "entry_gemv_pallas"]
 
 
 def _kernel(tab_ref, a_ref, b_ref, out_ref, *, n_codes: int):
@@ -111,3 +112,107 @@ def table_gemv_pallas(
         compiler_params=pltpu.TPUCompilerParams(**params),
         interpret=interpret,
     )(tables_flat, a_codes, b_codes)
+
+
+# ---------------------------------------------------------------------------
+# Table-free variant: synthesize the VMEM tile from the (D, R) config masks
+# ---------------------------------------------------------------------------
+
+
+def _entry_kernel(masks_ref, a_ref, b_ref, out_ref, *, n_bits: int):
+    """One (d, k) step of the table-free GEMV.
+
+    Instead of holding this config's (A*B,) product table in VMEM, synthesize
+    its per-row ``(4, B)`` planes from the (1, R) masks block by the
+    carry-chain model (``R * 4 * W`` chain steps over the B axis) and gather
+    per row: ``prod = sum_r small_r[pair_r(a), b] << 2r``.  VMEM residency
+    drops from ``A*B`` ints (64 KB at N=8; 67 MB -- impossible -- at N=12) to
+    ``R * 4 * B`` (4 KB at N=8, 393 KB at N=12), which is what unlocks
+    wide-operand app BEHAV."""
+    spec = spec_for(n_bits)
+    k = pl.program_id(1)
+    b_in = spec.n_inputs
+    half = b_in // 2
+    w_bits, cpr = spec.width, spec.cols_removable
+    modw = (1 << w_bits) - 1
+
+    b_codes = jax.lax.broadcasted_iota(jnp.int32, (1, b_in), 1)
+    b_s = jnp.where(b_codes >= half, b_codes - b_in, b_codes)  # (1, B) signed
+
+    a = a_ref[...]                                             # (M, kt)
+    b = b_ref[...]                                             # (kt, N)
+    part = None
+    for r in range(spec.rows):  # static unroll over partial-product rows
+        top = r == spec.rows - 1
+        mask_r = masks_ref[0, r]                               # scalar
+        bx = -b_s if top else b_s
+        planes = []
+        for p in range(4):
+            a0, a1 = (p >> 1) & 1, p & 1
+            t1 = (b_s & modw) if a0 else jnp.zeros_like(b_s)
+            t2 = ((bx << 1) & modw) if a1 else jnp.zeros_like(b_s)
+            planes.append(_chain_eval(t1, t2, mask_r, w_bits, cpr, jnp, jnp.int32))
+        small_r = jnp.concatenate(planes, axis=0).reshape(-1)  # (4*B,) flat
+        pair = 2 * ((a >> (2 * r)) & 1) + ((a >> (2 * r + 1)) & 1)
+        idx = pair[:, :, None] * b_in + b[None, :, :]          # (M, kt, N)
+        prod = jnp.take(small_r, idx.reshape(-1), axis=0).reshape(idx.shape)
+        term = prod.sum(axis=1) << (2 * r)
+        part = term if part is None else part + term
+    part = part[None]                                          # (1, M, N)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "k_tile", "interpret"))
+def entry_gemv_pallas(
+    masks: jnp.ndarray,           # (D, R) int32 per-row config masks
+    a_codes: jnp.ndarray,         # (M, K) int32 operand-A codes (config-shared)
+    b_codes: jnp.ndarray,         # (K, N) int32 operand-B codes
+    n_bits: int,
+    k_tile: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Table-free twin of :func:`table_gemv_pallas`: (D, M, N) int32.
+
+    Bit-identical to the table kernel (the synthesized planes equal the
+    gathered tables), with no (D, A*B) table build or HBM staging.  Zero-code
+    K padding still contributes nothing: every config maps (0, 0) -> 0.
+    Signed multipliers only.
+    """
+    op_spec = spec_for(n_bits)
+    d, rows = masks.shape
+    m, k = a_codes.shape
+    k2, n = b_codes.shape
+    assert rows == op_spec.rows, (rows, op_spec.rows)
+    assert k == k2, (k, k2)
+    spec = registry.get("fastapp.entry_pallas")
+    if k_tile is None:
+        bucket = spec.bucket(n_bits=n_bits, m=m, k=k, n=n)
+        k_tile = spec.default_tiles(bucket)["k_tile"]
+    assert k % k_tile == 0, (k, k_tile)
+
+    cost = spec.cost_estimate(d=d, m=m, k=k, n=n, a=op_spec.n_inputs,
+                              rows=rows, width=op_spec.width)
+    params = spec.compiler_params(m=m, k_tile=k_tile, n=n, a=op_spec.n_inputs,
+                                  rows=rows)
+    grid = (d, k // k_tile)
+    return pl.pallas_call(
+        functools.partial(_entry_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, k_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((k_tile, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m, n), jnp.int32),
+        cost_estimate=pl.CostEstimate(**cost),
+        compiler_params=pltpu.TPUCompilerParams(**params),
+        interpret=interpret,
+    )(masks, a_codes, b_codes)

@@ -264,6 +264,28 @@ def _char_params(*, rows: int, d_block: int, a_tile: int, b: int, **_) -> dict:
     }
 
 
+def _entry_char_cost(*, rows: int, d: int, a: int, b: int, a_tile: int,
+                     width: int, **_) -> dict:
+    # the table-kernel reduction plus the in-VMEM synthesis: R*4 carry chains
+    # of `width` steps (~6 lane-ops each) over the B axis, re-run per A tile;
+    # HBM traffic is just the (D, R) masks and the partial stacks
+    return {
+        "flops": d * a * b * (6 * rows + 12)
+        + (a // a_tile) * d * rows * 4 * b * width * 6,
+        "bytes_accessed": 4 * d * rows + 8 * (a // a_tile) * d * 8,
+        "transcendentals": 0,
+    }
+
+
+def _entry_char_params(*, rows: int, d_block: int, a_tile: int, b: int, **_) -> dict:
+    # masks block + the synthesized per-row planes + the reconstructed tile
+    block_bytes = 4 * (d_block * rows + d_block * 4 * b + d_block * a_tile * b)
+    return {
+        "dimension_semantics": ("parallel", "parallel"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
+
+
 def _app_bucket(*, n_bits: int, d: int, m: int, k: int, n: int):
     return (
         int(n_bits),
@@ -288,6 +310,39 @@ def _app_xla_constraint(bucket, tiles) -> bool:
     # chunks wider than the config batch degenerate to d (min() in the
     # engine), so they would duplicate the d-sized candidate
     return tiles["d_chunk"] <= bucket[1]
+
+
+def _entry_app_constraint(bucket, tiles) -> bool:
+    n_bits, d, m, k, n = bucket
+    k_tile = tiles["k_tile"]
+    if k_tile > _pow2_bucket(k):
+        return False
+    a = 1 << n_bits
+    # VMEM fit: one row's synthesized (4, B) planes + the gather tile -- no
+    # (A, B) table, which is what admits 12-bit operands the table kernel
+    # cannot hold (a*a ints would be 67 MB there)
+    return 4 * (4 * a + m * k_tile * n + m * k_tile + k_tile * n) < (12 << 20)
+
+
+def _entry_app_cost(*, d: int, m: int, k: int, n: int, a: int, rows: int,
+                    width: int, **_) -> dict:
+    return {
+        # R gather-accumulate passes over the (M, K, N) tensor + the per-grid-
+        # step synthesis (R*4 chains of `width` steps over the B axis; one
+        # grid step per default-width K tile)
+        "flops": 2 * d * m * k * n * rows
+        + d * max(1, k // 64) * rows * 4 * a * width * 6,
+        "bytes_accessed": 4 * (d * rows + m * k + k * n + d * m * n),
+        "transcendentals": 0,
+    }
+
+
+def _entry_app_params(*, m: int, k_tile: int, n: int, a: int, rows: int, **_) -> dict:
+    block_bytes = 4 * (rows + 4 * a + m * k_tile * n + m * k_tile + k_tile * n + m * n)
+    return {
+        "dimension_semantics": ("parallel", "arbitrary"),
+        "vmem_limit_bytes": max(4 << 20, 2 * block_bytes),
+    }
 
 
 def _app_defaults(bucket) -> dict:
@@ -466,6 +521,40 @@ register(KernelSpec(
     description="tiled error-table reconstruction + per-A-tile partial stats",
 ))
 
+register(KernelSpec(
+    name="fastchar.entry",
+    engine="fastchar",
+    impl="entry",
+    fn_ref="repro.kernels.tuning:_run_fastchar",
+    oracle_ref="repro.kernels.tuning:_oracle_fastchar",
+    tunables=(
+        ("a_tile", (8, 16, 32, 64, 128, 256)),
+        ("d_block", (2, 4, 8, 16, 32)),
+    ),
+    defaults_fn=_char_defaults,
+    bucket_fn=_char_bucket,
+    constraint=_char_constraint,
+    description="table-free XLA twin: per-row planes synthesized from masks",
+))
+
+register(KernelSpec(
+    name="fastchar.entry_pallas",
+    engine="fastchar",
+    impl="entry_pallas",
+    fn_ref="repro.kernels.tuning:_run_fastchar",
+    oracle_ref="repro.kernels.tuning:_oracle_fastchar",
+    tunables=(
+        ("a_tile", (8, 16, 32, 64, 128, 256)),
+        ("d_block", (2, 4, 8, 16, 32)),
+    ),
+    defaults_fn=_char_defaults,
+    bucket_fn=_char_bucket,
+    constraint=_char_constraint,
+    cost_fn=_entry_char_cost,
+    params_fn=_entry_char_params,
+    description="table-free BEHAV kernel: masks-only input, in-VMEM synthesis",
+))
+
 # -- fastapp: table arithmetic ----------------------------------------------
 
 register(KernelSpec(
@@ -505,6 +594,34 @@ register(KernelSpec(
     cost_fn=_app_cost,
     params_fn=_app_params,
     description="K-tiled batched table-GEMV, per-config table VMEM-resident",
+))
+
+register(KernelSpec(
+    name="fastapp.entry",
+    engine="fastapp",
+    impl="entry",
+    fn_ref="repro.kernels.tuning:_run_fastapp",
+    oracle_ref="repro.kernels.tuning:_oracle_fastapp",
+    tunables=(("d_chunk", (2, 4, 8, 16, 32)),),
+    defaults_fn=_app_xla_defaults,
+    bucket_fn=_app_bucket,
+    constraint=_app_xla_constraint,
+    description="table-free gathers from device-synthesized per-row planes",
+))
+
+register(KernelSpec(
+    name="fastapp.entry_pallas",
+    engine="fastapp",
+    impl="entry_pallas",
+    fn_ref="repro.kernels.tuning:_run_fastapp",
+    oracle_ref="repro.kernels.tuning:_oracle_fastapp",
+    tunables=(("k_tile", (16, 32, 64, 128, 256)),),
+    defaults_fn=_app_defaults,
+    bucket_fn=_app_bucket,
+    constraint=_entry_app_constraint,
+    cost_fn=_entry_app_cost,
+    params_fn=_entry_app_params,
+    description="table-free K-tiled GEMV: VMEM tile synthesized from masks",
 ))
 
 # -- axo_matmul: AxO serving matmul (exact product + rank-R error factors) --

@@ -110,8 +110,8 @@ _MEMO: dict[str, dict] = {}
 # are interpret-mode anyway, so Pallas search inputs are bucket-shaped but
 # bounded (interpret executes one python step per grid cell); the XLA twins
 # are cheap to time at their real bucket sizes.
-_MAX_CHAR_D = {"pallas": 64, "xla": 256}
-_MAX_APP_D = {"pallas": 8, "xla": 64, "gemm": 8}
+_MAX_CHAR_D = {"pallas": 64, "xla": 256, "entry": 256, "entry_pallas": 64}
+_MAX_APP_D = {"pallas": 8, "xla": 64, "gemm": 8, "entry": 64, "entry_pallas": 8}
 _MAX_APP_MKN = (64, 256, 64)
 _MAX_MOO_P = 128
 _MAX_AXO_MKN = (32, 192, 160)

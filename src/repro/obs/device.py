@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import time
 
-__all__ = ["make_tap", "null_tap", "flush"]
+__all__ = ["make_tap", "make_batched_tap", "null_tap", "flush"]
 
 
 def null_tap(*args, **kwargs) -> None:
@@ -59,6 +59,40 @@ def make_tap(tel, name: str, fields: tuple):
         # unordered: taps must not serialize the compiled program; record
         # order is recovered from the emitted fields (e.g. generation index)
         io_callback(_sink, None, *vals, ordered=False)
+
+    tap.fields = fields
+    tap.series = name
+    return tap
+
+
+def make_batched_tap(tel, name: str, fields: tuple):
+    """Build a chunk-flushing emit function ``tap(rows, valid)``.
+
+    The per-record tap from :func:`make_tap` stages one ``io_callback`` firing
+    per loop iteration; in tight ``fori_loop`` bodies (the tapped GA's
+    per-generation hv) the host round-trips dominate the dispatch.  The
+    batched variant flushes a whole ``(C, len(fields))`` f32 row-buffer with
+    ONE callback: the host side splits the buffer back into per-row records
+    -- same series name, same per-record fields, same ``_host_t``/
+    ``tap.<name>`` accounting as C individual firings -- and drops rows where
+    ``valid`` is false (ragged final chunks pass a mask).
+    """
+    import numpy as np
+    from jax.experimental import io_callback
+
+    def _sink(rows, valid) -> None:
+        rows = np.asarray(rows)
+        for row in rows[np.asarray(valid).astype(bool)]:
+            rec = {f: np.asarray(v) for f, v in zip(fields, row)}
+            rec["_host_t"] = time.perf_counter()
+            tel.emit(name, rec)
+            tel.count(f"tap.{name}")
+
+    def tap(rows, valid):
+        # unordered like make_tap: record order within one flush is preserved
+        # by the host loop; cross-flush order is recovered from the emitted
+        # fields (e.g. the generation index)
+        io_callback(_sink, None, rows, valid, ordered=False)
 
     tap.fields = fields
     tap.series = name

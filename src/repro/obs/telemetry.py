@@ -241,6 +241,12 @@ class Telemetry:
 
         return make_tap(self, name, fields)
 
+    def device_batched_tap(self, name: str, fields: tuple):
+        """Chunk-flushing tap ``tap(rows, valid)``; see ``obs.device``."""
+        from .device import make_batched_tap
+
+        return make_batched_tap(self, name, fields)
+
     # -- queries / export -----------------------------------------------------
 
     def counter(self, name: str) -> int:
@@ -351,6 +357,11 @@ class NullTelemetry(Telemetry):
         pass
 
     def device_tap(self, name: str, fields: tuple):
+        from .device import null_tap
+
+        return null_tap
+
+    def device_batched_tap(self, name: str, fields: tuple):
         from .device import null_tap
 
         return null_tap

@@ -149,10 +149,12 @@ def test_matmul_impl_parity(batch8):
     b = rng.integers(0, spec.n_inputs, (100, 7))
     outs = {
         impl: np.asarray(table_matmul_jax(batch, a, b, impl=impl, interpret=True))
-        for impl in ("gemm", "xla", "pallas")
+        for impl in ("gemm", "xla", "pallas", "entry", "entry_pallas")
     }
     np.testing.assert_array_equal(outs["gemm"], outs["xla"])
     np.testing.assert_array_equal(outs["pallas"], outs["xla"])
+    np.testing.assert_array_equal(outs["entry"], outs["xla"])
+    np.testing.assert_array_equal(outs["entry_pallas"], outs["xla"])
     # oracle cross-check on one config
     from repro.apps.base import table_matmul
 
@@ -220,6 +222,125 @@ def test_unknown_impl_raises(batch8):
     spec, batch = batch8
     with pytest.raises(ValueError):
         table_matmul_jax(batch, np.zeros((2, 4), int), np.zeros((4, 2), int), impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Table-free entry impls
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["entry", "entry_pallas"])
+def test_entry_matmul_exhaustive_4x4(impl):
+    """All 1024 4x4 configs through the table-free matmul, bit-identical to
+    the numpy oracle (no table is ever built on the entry paths)."""
+    from repro.apps.base import table_matmul
+
+    spec = spec_for(4)
+    cfgs = _all_configs(spec.n_luts)
+    batch = table_batch(spec, cfgs)
+    rng = np.random.default_rng(20)
+    a = rng.integers(0, spec.n_inputs, (5, 24))
+    b = rng.integers(0, spec.n_inputs, (24, 3))
+    out = np.asarray(table_matmul_jax(batch, a, b, impl=impl, interpret=True))
+    tables = product_tables(spec, cfgs)
+    ref = np.stack([table_matmul(t, a, b) for t in tables])
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_entry_matmul_per_config_codes(batch8):
+    """Per-config operand codes (the FFN's requantized activations) ride the
+    table-free batched gather; both entry impls route there."""
+    spec, batch = batch8
+    rng = np.random.default_rng(21)
+    a = rng.integers(0, spec.n_inputs, (len(batch), 9, 33))
+    b = rng.integers(0, spec.n_inputs, (33, 5))
+    ref = np.asarray(table_matmul_jax(batch, a, b, impl="xla"))
+    for impl in ("entry", "entry_pallas"):
+        np.testing.assert_array_equal(
+            np.asarray(table_matmul_jax(batch, a, b, impl=impl)), ref
+        )
+
+
+def test_entry_conv_parity(batch8):
+    spec, batch = batch8
+    rng = np.random.default_rng(22)
+    x = rng.integers(0, spec.n_inputs, 120)
+    h = rng.integers(0, spec.n_inputs, 9)
+    img = rng.integers(0, spec.n_inputs, (16, 16))
+    k = rng.integers(0, spec.n_inputs, (3, 3))
+    np.testing.assert_array_equal(
+        np.asarray(table_conv1d_jax(batch, x, h, impl="entry")),
+        np.asarray(table_conv1d_jax(batch, x, h, impl="xla")),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(table_conv2d_jax(batch, img, k, impl="entry")),
+        np.asarray(table_conv2d_jax(batch, img, k, impl="xla")),
+    )
+
+
+def test_entry_never_builds_tables(batch8):
+    """The whole point: a batch scored through impl='entry' must finish with
+    its full product tables still unbuilt."""
+    spec = spec_for(8)
+    batch = table_batch(spec, gen_random(spec, 4, seed=23))
+    rng = np.random.default_rng(23)
+    a = rng.integers(0, spec.n_inputs, (6, 32))
+    b = rng.integers(0, spec.n_inputs, (32, 4))
+    table_matmul_jax(batch, a, b, impl="entry")
+    table_matmul_jax(batch, a, b, impl="entry_pallas", interpret=True)
+    assert batch._tables is None
+    assert batch._small is None  # no host row-table gather either
+
+
+def test_entry_requires_masks(batch8):
+    spec, batch = batch8
+    raw = TableBatch(masks=None, n_bits=spec.n_bits, _tables=batch.tables)
+    a = np.zeros((2, 4), int)
+    b = np.zeros((4, 2), int)
+    for impl in ("entry", "entry_pallas"):
+        with pytest.raises(ValueError, match="masks"):
+            table_matmul_jax(raw, a, b, impl=impl)
+    # auto-selection (impl=None via ctx) falls back instead of raising
+    from repro.core.engine import ExecutionContext
+
+    raw2 = TableBatch(
+        masks=None, n_bits=spec.n_bits, _tables=batch.tables,
+        ctx=ExecutionContext(backend="jax", kernel_impl="entry"),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(table_matmul_jax(raw2, a, b)),
+        np.asarray(table_matmul_jax(batch, a, b, impl="xla")),
+    )
+
+
+def test_ffn_device_requant_matches_host_within_tolerance():
+    """FFN GEMM1 -> GeLU -> requant -> GEMM2 fully on device: BEHAV agrees
+    with the bit-exact host-f64 requant path to the documented tolerance, and
+    the chain composes with the table-free entry impl (no table build)."""
+    from repro.apps.ffn import TransformerFFN
+    from repro.core.engine import ExecutionContext
+
+    spec = spec_for(8)
+    rng = np.random.default_rng(11)
+    cfgs = np.ones((6, spec.n_luts), dtype=np.uint8)
+    for i in range(1, 6):  # mild approximations: flip i random LUTs
+        cfgs[i, rng.choice(spec.n_luts, size=i, replace=False)] = 0
+    tabs = product_tables(spec, cfgs)
+
+    host = TransformerFFN(d_model=16, d_ff=24, n_tokens=12)
+    dev = TransformerFFN(d_model=16, d_ff=24, n_tokens=12, requant="device")
+    bh = host.behav_jax_from_tables(tabs)
+    bd = dev.behav_jax_from_tables(tabs)
+    np.testing.assert_allclose(bd, bh, atol=2e-2)
+
+    # same chain through the table-free engine: tables stay unbuilt
+    ctx = ExecutionContext(backend="jax", kernel_impl="entry")
+    batch = table_batch(spec, cfgs, ctx=ctx)
+    be = TransformerFFN(
+        d_model=16, d_ff=24, n_tokens=12, requant="device"
+    ).behav_jax_from_tables(batch)
+    np.testing.assert_allclose(be, bd, atol=1e-9)
+    assert batch._tables is None
 
 
 # ---------------------------------------------------------------------------

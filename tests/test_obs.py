@@ -340,6 +340,35 @@ def test_tap_arity_is_checked():
         tap(jnp.float32(1.0))
 
 
+def test_batched_tap_flushes_rows_and_drops_masked():
+    tel = tm.Telemetry("t")
+    tap = tel.device_batched_tap("chunk", ("g", "v"))
+
+    @jax.jit
+    def f():
+        rows = jnp.stack(
+            [
+                jnp.array([0.0, 10.0], jnp.float32),
+                jnp.array([1.0, 11.0], jnp.float32),
+                jnp.array([-1.0, 0.0], jnp.float32),  # padding row
+            ]
+        )
+        tap(rows, rows[:, 0] >= 0.0)
+        return rows.sum()
+
+    for _ in range(2):
+        f()
+    obs_device.flush()
+    # one flush per dispatch -> 2 valid rows each; the masked padding row
+    # never reaches the series or the counter
+    recs = tel.series["chunk"]
+    assert len(recs) == 4
+    assert tel.counter("tap.chunk") == 4
+    assert [int(r["g"]) for r in recs[:2]] == [0, 1]
+    assert [float(r["v"]) for r in recs[:2]] == [10.0, 11.0]
+    assert all("_host_t" in r for r in recs)
+
+
 # ---------------------------------------------------------------------------
 # Per-generation hypervolume from inside CompiledNSGA2's fori_loop
 # ---------------------------------------------------------------------------

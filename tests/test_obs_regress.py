@@ -17,6 +17,8 @@
 """
 
 import json
+import pathlib
+import re
 import urllib.request
 
 import numpy as np
@@ -378,6 +380,95 @@ def test_healthz_device_liveness_real_probe():
     assert payload["status"] == "ok"
     assert payload["device"]["status"] == "ok"
     assert payload["device"]["count"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Committed alerting rules (launch/alerts.yml)
+# ---------------------------------------------------------------------------
+
+
+_ALERTS_PATH = pathlib.Path(__file__).resolve().parents[1] / "launch" / "alerts.yml"
+_DURATION_RE = re.compile(r"^\d+(ms|s|m|h|d|w|y)$")
+
+
+def _load_alert_groups():
+    text = _ALERTS_PATH.read_text()
+    try:
+        import yaml
+    except ImportError:
+        # structural fallback: the committed file is plain block YAML, so a
+        # minimal indentation walk recovers the rule dicts we assert on
+        groups, rule = [], None
+        for line in text.splitlines():
+            s = line.strip()
+            if s.startswith("- name:"):
+                groups.append({"name": s.split(":", 1)[1].strip(), "rules": []})
+            elif s.startswith("- alert:"):
+                rule = {"alert": s.split(":", 1)[1].strip()}
+                groups[-1]["rules"].append(rule)
+            elif rule is not None and s.startswith(
+                ("expr:", "for:", "severity:", "summary:", "description:")
+            ):
+                k, v = s.split(":", 1)
+                if k == "severity":
+                    rule.setdefault("labels", {})[k] = v.strip()
+                elif k in ("summary", "description"):
+                    # block scalars (>-) read as a truthy marker -- enough
+                    # for the presence assertions
+                    rule.setdefault("annotations", {})[k] = v.strip() or ">-"
+                else:
+                    rule[k] = v.strip()
+        return groups
+    doc = yaml.safe_load(text)
+    assert isinstance(doc, dict) and "groups" in doc
+    return doc["groups"]
+
+
+def test_alert_rules_syntax():
+    """Prometheus rule-file shape: groups -> rules, each with alert/expr/for,
+    a severity label, and both annotations."""
+    groups = _load_alert_groups()
+    assert len(groups) >= 2
+    n_rules = 0
+    for g in groups:
+        assert g["name"].startswith("repro_serve")
+        for r in g["rules"]:
+            n_rules += 1
+            assert re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", r["alert"])
+            assert r["expr"].strip()
+            assert _DURATION_RE.match(str(r["for"]))
+            assert r["labels"]["severity"] in ("warning", "critical")
+            ann = r.get("annotations", {})
+            assert ann.get("summary") and ann.get("description")
+    assert n_rules >= 6
+
+
+def test_alert_rules_reference_live_exposition_names():
+    """Every repro_* metric an alert expression references must be a name the
+    serving telemetry actually exposes through render_prometheus."""
+    tel = tm.Telemetry("serve-alerts")
+    # the exact series launch/serve.py records (see its tel.* call sites)
+    tel.count("serve.requests")
+    tel.observe("serve.prefill_ms", 1.0)
+    tel.observe("serve.decode_step_ms", 1.0)
+    tel.gauge("serve.tokens_per_s", 1.0)
+    tel.observe("serve.tokens_per_s", 1.0)
+    tel.gauge("serve.axo_top1", 1.0)
+    tel.gauge("serve.axo_free_run_match", 1.0)
+    tel.gauge("serve.axo_logit_rel_err", 0.0)
+    exposed = {
+        line.split("{", 1)[0].split(" ")[0]
+        for line in render_prometheus(tel).splitlines()
+        if line and not line.startswith("#")
+    }
+
+    referenced = set()
+    for g in _load_alert_groups():
+        for r in g["rules"]:
+            referenced |= set(re.findall(r"\brepro_[a-z0-9_]+", str(r["expr"])))
+    assert referenced  # the rules do gate repro_* metrics
+    missing = referenced - exposed
+    assert not missing, f"alert rules reference unexposed metrics: {missing}"
 
 
 # ---------------------------------------------------------------------------

@@ -6,8 +6,11 @@ import pytest
 from repro.core.operator_model import (
     accurate_config,
     config_to_masks,
+    entry_product,
+    entry_row_values,
     error_tables,
     exact_product_table,
+    exact_table,
     masks_to_config,
     product_tables,
     simulate_product,
@@ -92,3 +95,85 @@ def test_batch_table_consistency():
     batch = product_tables(spec, cfgs)
     for i in range(len(cfgs)):
         np.testing.assert_array_equal(batch[i], product_tables(spec, cfgs[i][None])[0])
+
+
+# ---------------------------------------------------------------------------
+# Table-free entry synthesis + generalized operator kinds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits", [4, 6, 8])
+def test_entry_product_matches_tables_exhaustively(n_bits):
+    """The table-free entry function IS the table: for every (config, a, b),
+    ``entry_product`` equals the ``product_tables`` entry bit-for-bit."""
+    spec = spec_for(n_bits)
+    rng = np.random.default_rng(n_bits)
+    cfgs = rng.integers(0, 2, (4, spec.n_luts)).astype(np.uint8)
+    cfgs[0] = 1
+    tables = product_tables(spec, cfgs).astype(np.int64)
+    masks = config_to_masks(spec, cfgs).astype(np.int64)
+    codes = np.arange(spec.n_inputs, dtype=np.int64)
+    got = entry_product(
+        spec, masks[:, None, None, :], codes[:, None], codes[None, :]
+    )
+    np.testing.assert_array_equal(got, tables)
+
+
+def test_entry_row_values_combine_to_product():
+    spec = spec_for(8)
+    rng = np.random.default_rng(7)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    masks = config_to_masks(spec, cfg[None]).astype(np.int64)[0]
+    a = rng.integers(-128, 128, 200)
+    b = rng.integers(-128, 128, 200)
+    rows = entry_row_values(spec, masks, a, b)           # (200, R)
+    total = sum(rows[:, r] << (2 * r) for r in range(spec.rows))
+    np.testing.assert_array_equal(total, entry_product(spec, masks, a, b))
+
+
+def test_entry_product_accepts_signed_values_and_codes():
+    """Negative int operands carry the same low bits as their codes (the
+    row decomposition only reads ``n_bits`` low bits)."""
+    spec = spec_for(8)
+    rng = np.random.default_rng(8)
+    cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+    masks = config_to_masks(spec, cfg[None]).astype(np.int64)[0]
+    vals = rng.integers(-128, 128, 100)
+    codes = vals & (spec.n_inputs - 1)
+    np.testing.assert_array_equal(
+        entry_product(spec, masks, vals, vals[::-1]),
+        entry_product(spec, masks, codes, codes[::-1]),
+    )
+
+
+def test_adder_spec_shapes():
+    spec = spec_for(8, op="add")
+    assert (spec.rows, spec.width, spec.cols_removable) == (1, 9, 8)
+    assert spec.n_luts == 8
+    # odd widths are fine for adders (the evenness constraint is mul-only)
+    assert spec_for(5, op="add").n_luts == 5
+
+
+def test_adder_accurate_config_is_exact():
+    spec = spec_for(6, op="add")
+    table = product_tables(spec, accurate_config(spec)[None])[0]
+    np.testing.assert_array_equal(table, exact_table(spec))
+
+
+def test_adder_tables_match_bit_level_oracle_exhaustively():
+    spec = spec_for(4, op="add")
+    rng = np.random.default_rng(9)
+    for _ in range(5):
+        cfg = rng.integers(0, 2, spec.n_luts).astype(np.uint8)
+        table = product_tables(spec, cfg[None])[0]
+        for a in range(-8, 8):
+            for b in range(-8, 8):
+                assert table[a & 15, b & 15] == simulate_product(spec, a, b, cfg)
+
+
+def test_exact_table_matches_legacy_product_table():
+    np.testing.assert_array_equal(
+        exact_table(spec_for(8)), exact_product_table(8)
+    )
+    spec = spec_for(4, op="add")
+    assert exact_table(spec)[(-3) & 15, 7] == 4

@@ -26,8 +26,12 @@ SMALL_BUCKETS = {
 
 
 def test_every_engine_has_registered_impls():
-    assert registry.impl_names("fastchar") == ("xla", "pallas")
-    assert registry.impl_names("fastapp") == ("gemm", "xla", "pallas")
+    assert registry.impl_names("fastchar") == (
+        "xla", "pallas", "entry", "entry_pallas"
+    )
+    assert registry.impl_names("fastapp") == (
+        "gemm", "xla", "pallas", "entry", "entry_pallas"
+    )
     assert registry.impl_names("fastmoo") == ("xla", "pallas")
     assert registry.impl_names("axo_matmul") == ("xla", "pallas")
     assert registry.impl_names("flash_attention") == ("xla", "pallas")
@@ -141,6 +145,17 @@ def test_every_tile_candidate_matches_oracle(name):
                 rtol=spec.tol, atol=spec.tol * scale,
                 err_msg=f"{name} tiles={tiles}",
             )
+
+
+def test_entry_gemv_admits_12bit_where_table_kernel_cannot():
+    """The table-free GEMV's VMEM constraint (per-row planes, no (A, B)
+    table) admits 12-bit operands; the table kernel's resident 67 MB table
+    excludes every candidate at that width."""
+    shape = dict(n_bits=12, d=4, m=8, k=64, n=8)
+    table = registry.get("fastapp.pallas")
+    entry = registry.get("fastapp.entry_pallas")
+    assert not table.candidates(table.bucket(**shape))
+    assert entry.candidates(entry.bucket(**shape))
 
 
 def test_moo_2d_friendly_default_layout():

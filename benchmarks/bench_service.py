@@ -1,0 +1,129 @@
+"""Persistent DSE service: cold vs warm library economics on a repeated trace.
+
+The service tentpole's claim is that the operator library turns repeated DSE
+traffic from O(search) into O(lookup): the first pass over a workload trace
+pays the full estimator-fit + compiled-GA + characterization cost, the replay
+answers every request from the content-addressed result cache.  Headline rows:
+
+  * ``service.cold_sweep``   -- the trace against an EMPTY library,
+  * ``service.warm_replay``  -- the identical trace against the now-warm
+    library (every lane a request-cache hit),
+  * ``service.replay_speedup`` -- hv/wall-second ratio (gated >= 1.5x),
+  * ``service.warm_start_new_seed`` -- a NEW seed at equal generation budget,
+    library-seeded GA vs cold GA (warm hv must not lose),
+  * ``service.queue_coalesce`` -- N compatible HTTP-shaped jobs through the
+    batched queue -> 1 sweep dispatch (latency note in EXPERIMENTS.md).
+
+Hard assertions (the ISSUE's acceptance criteria) live in the bench itself so
+the perf sentinel fails loudly, not silently: hit-rate counter > 0, warm
+hv >= cold hv, warm hv/wall-s >= 1.5x cold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+from repro import obs
+from repro.core.dse import DSESettings, run_dse, run_dse_sweep
+from repro.service import DSEJobQueue, DSERequest, OperatorStore, default_runner
+
+from .common import BenchCtx, row
+
+SF_GRID = (0.5, 1.0)
+SEEDS = (0, 1)
+
+
+def run(ctx: BenchCtx) -> list[dict]:
+    spec = ctx.spec8
+    ds = ctx.ds8()
+    rows: list[dict] = []
+    settings = DSESettings(
+        const_sf=SF_GRID[0],
+        pop_size=32 if ctx.quick else 64,
+        n_gen=12 if ctx.quick else ctx.n_gen,
+        backend="jax",
+        seed=ctx.seed,
+    )
+    n_lanes = len(SF_GRID) * len(SEEDS)
+
+    tel = obs.Telemetry("bench-service")
+    store = OperatorStore(root=tempfile.mkdtemp(prefix="axo-bench-lib-"),
+                          tel=tel)
+
+    # -- cold: the trace against an empty library -----------------------------
+    t0 = time.perf_counter()
+    cold = run_dse_sweep(spec, ds, "ga", settings=settings, seeds=SEEDS,
+                         const_sf_grid=SF_GRID, store=store)
+    t_cold = time.perf_counter() - t0
+    hv_cold = sum(r.hv_vpf for r in cold)
+    rows.append(row("service.cold_sweep", t_cold * 1e6,
+                    f"hv_vpf={hv_cold:.6g} lanes={n_lanes} "
+                    f"hv_per_s={hv_cold / t_cold:.6g}"))
+
+    # -- warm: the identical trace replayed (request-cache hits) --------------
+    t0 = time.perf_counter()
+    warm = run_dse_sweep(spec, ds, "ga", settings=settings, seeds=SEEDS,
+                         const_sf_grid=SF_GRID, store=store)
+    t_warm = time.perf_counter() - t0
+    hv_warm = sum(r.hv_vpf for r in warm)
+    hits = tel.counter("service.request_hit")
+    misses = tel.counter("service.request_miss")
+    rows.append(row("service.warm_replay", t_warm * 1e6,
+                    f"hv_vpf={hv_warm:.6g} request_hits={hits} "
+                    f"hv_per_s={hv_warm / t_warm:.6g}"))
+    rows.append(row("service.store_hit_rate", 0.0,
+                    f"hit_rate={hits / max(1, hits + misses):.3f} "
+                    f"hits={hits} misses={misses}"))
+
+    speedup = (hv_warm / t_warm) / (hv_cold / t_cold)
+    rows.append(row("service.replay_speedup", 0.0,
+                    f"{speedup:.1f}x hv/wall-s (gate >= 1.5x)"))
+
+    # acceptance criteria: fail the suite loudly, not via a silent drift
+    assert hits > 0, "warm replay produced no request-cache hits"
+    assert hv_warm >= hv_cold, f"warm hv {hv_warm} < cold hv {hv_cold}"
+    assert speedup >= 1.5, f"warm hv/wall-s only {speedup:.2f}x cold"
+
+    # -- warm start: a NEW seed at equal budget, library-seeded vs cold GA ----
+    fresh = dataclasses.replace(settings, seed=ctx.seed + 7)
+    t0 = time.perf_counter()
+    r_cold = run_dse(spec, ds, "ga", settings=fresh)
+    t_nc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_warm = run_dse(spec, ds, "ga", settings=fresh, store=store)
+    t_nw = time.perf_counter() - t0
+    rows.append(row("service.warm_start_new_seed", t_nw * 1e6,
+                    f"hv_warm={r_warm.hv_vpf:.6g} hv_cold={r_cold.hv_vpf:.6g} "
+                    f"cold_wall_s={t_nc:.2f} warm_wall_s={t_nw:.2f}"))
+    assert r_warm.hv_vpf >= r_cold.hv_vpf, (
+        f"library-seeded GA lost hv at equal budget: "
+        f"{r_warm.hv_vpf} < {r_cold.hv_vpf}")
+
+    # -- queue coalescing: N compatible jobs -> 1 sweep dispatch --------------
+    q_tel = obs.Telemetry("bench-service-queue")
+    q_store = OperatorStore(root=tempfile.mkdtemp(prefix="axo-bench-q-"),
+                            tel=q_tel)
+    q_settings = DSESettings(pop_size=16, n_gen=6, backend="jax")
+    queue = DSEJobQueue(
+        default_runner(settings=q_settings, store=q_store, n_train=120),
+        tel=q_tel, linger_s=0.1,
+    )
+    try:
+        t0 = time.perf_counter()
+        ids = [queue.submit(DSERequest(n_bits=4, const_sf=sf, seed=s))
+               for sf in (0.5, 1.0) for s in (0, 1)]
+        if not queue.join(timeout=600):
+            raise RuntimeError("queue did not drain")
+        t_q = time.perf_counter() - t0
+        assert all(queue.result(i)["status"] == "done" for i in ids)
+        jobs = q_tel.counter("service.jobs")
+        batches = q_tel.counter("service.batches")
+        assert batches == 1, f"{jobs} compatible jobs took {batches} dispatches"
+        rows.append(row("service.queue_coalesce", t_q * 1e6,
+                        f"jobs={jobs} batches={batches} "
+                        f"latency_s_total={t_q:.2f}"))
+    finally:
+        queue.close()
+    return rows

@@ -42,6 +42,7 @@ BENCHES = [
     "fastmoo",        # device NSGA-II engine vs numpy oracle GA
     "shard",          # multi-device ExecutionContext scaling (forced host devs)
     "serving",        # AxO-deployed LM serving: tokens/sec vs rank vs BEHAV
+    "service",        # persistent DSE service: cold vs warm library, queue
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -532,6 +532,50 @@ def _sharded_matmul_take_batched(ctx: ExecutionContext, d_chunk: int, bucket):
     )
 
 
+def _sharded_matmul_entry_shared(ctx: ExecutionContext, n_bits: int,
+                                 d_chunk: int, bucket):
+    from jax.sharding import PartitionSpec as P
+
+    return _sharded_by_bucket(
+        ("entry_shared", ctx, bucket), d_chunk,
+        lambda: jax.jit(ctx.shard_call(
+            lambda s, a, b: _matmul_entry_shared(s, a, b, n_bits, d_chunk),
+            in_specs=(P(None, MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+        )),
+    )
+
+
+def _sharded_matmul_entry_batched(ctx: ExecutionContext, n_bits: int,
+                                  d_chunk: int, bucket):
+    from jax.sharding import PartitionSpec as P
+
+    return _sharded_by_bucket(
+        ("entry_batched", ctx, bucket), d_chunk,
+        lambda: jax.jit(ctx.shard_call(
+            lambda s, a, b: _matmul_entry_batched(s, a, b, n_bits, d_chunk),
+            in_specs=(P(None, MESH_AXIS), P(MESH_AXIS), P()),
+            out_specs=P(MESH_AXIS),
+        )),
+    )
+
+
+def _sharded_entry_gemv(ctx: ExecutionContext, n_bits: int, k_tile: int,
+                        interpret: bool, bucket):
+    from jax.sharding import PartitionSpec as P
+
+    from ..kernels.app_kernels import entry_gemv_pallas
+
+    return _sharded_by_bucket(
+        ("entry_gemv", ctx, interpret, bucket), k_tile,
+        lambda: jax.jit(ctx.shard_call(
+            lambda mk, a, b: entry_gemv_pallas(
+                mk, a, b, n_bits, k_tile=k_tile, interpret=interpret
+            ),
+            in_specs=(P(MESH_AXIS), P(), P()), out_specs=P(MESH_AXIS),
+        )),
+    )
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_contract_gemm_flat(ctx: ExecutionContext, n_bits: int):
     from jax.sharding import PartitionSpec as P
@@ -626,6 +670,15 @@ def table_matmul_jax(
         if pad:  # zero codes map through entry (0, 0) -> 0: padding is inert
             a = jnp.concatenate([a, jnp.zeros((a.shape[0], pad), jnp.int32)], axis=1)
             b = jnp.concatenate([b, jnp.zeros((pad, b.shape[1]), jnp.int32)], axis=0)
+        if mesh_ctx is not None:
+            from ..kernels import registry
+
+            bucket = registry.get("fastapp.entry_pallas").bucket(
+                n_bits=batch.n_bits, d=d, m=m, k=k, n=n
+            )
+            return _sharded_entry_gemv(
+                mesh_ctx, batch.n_bits, k_tile, interpret, bucket
+            )(batch.masks, a, b)
         return entry_gemv_pallas(
             batch.masks, a, b, batch.n_bits, k_tile=k_tile, interpret=interpret
         )
@@ -637,6 +690,23 @@ def table_matmul_jax(
         if d_chunk is None:
             d_chunk = tiles_for(batch.ctx, "fastapp.entry",
                                 n_bits=batch.n_bits, d=d, m=m, k=k, n=n)["d_chunk"]
+        if mesh_ctx is not None:
+            from ..kernels import registry
+
+            # per-shard chunking, same story as the xla gather path: shrink
+            # d_chunk so it divides the local config slice exactly (no pad
+            # inside the shard), key the cache on the full shape bucket
+            dc = math.gcd(d // mesh_ctx.device_count, d_chunk)
+            bucket = registry.get("fastapp.entry").bucket(
+                n_bits=batch.n_bits, d=d, m=m, k=k, n=n
+            ) + (a.ndim,)
+            if a.ndim == 3:
+                return _sharded_matmul_entry_batched(
+                    mesh_ctx, batch.n_bits, dc, bucket
+                )(batch.entry_small, a, b)
+            return _sharded_matmul_entry_shared(
+                mesh_ctx, batch.n_bits, dc, bucket
+            )(batch.entry_small, a, b)
         d_chunk = min(d_chunk, d)
         sp = _pad_small(batch.entry_small, d_chunk)
         if a.ndim == 3:
@@ -687,7 +757,13 @@ def table_conv1d_jax(tables, x_codes, h_codes, impl: str | None = None) -> jnp.n
     mesh_ctx = _config_mesh_ctx(batch, len(batch))
     if impl in _ENTRY_IMPLS and _gemm_ok(h.shape[0], batch.n_bits):
         # table-free: same flat contract as "gemm", fed by synthesized planes
+        # (the sharded builder is shape-generic in the (R, D, 4, B) planes,
+        # so the entry path rides the identical shard_map)
         win = _windows_1d(x, h.shape[0])
+        if mesh_ctx is not None:
+            return _sharded_contract_gemm_flat(mesh_ctx, batch.n_bits)(
+                batch.entry_small, win, h
+            )
         return _contract_gemm_flat(batch.entry_small, win, h, batch.n_bits)
     if impl == "gemm":
         win = _windows_1d(x, h.shape[0])
@@ -715,10 +791,16 @@ def table_conv2d_jax(
         kh, kw = kern.shape
         win = _windows_2d(img, kh, kw)
         oy, ox = win.shape[0], win.shape[1]
-        out = _contract_gemm_flat(
-            batch.entry_small, win.reshape(oy * ox, kh * kw),
-            kern.reshape(-1), batch.n_bits,
-        )
+        if mesh_ctx is not None:
+            out = _sharded_contract_gemm_flat(mesh_ctx, batch.n_bits)(
+                batch.entry_small, win.reshape(oy * ox, kh * kw),
+                kern.reshape(-1),
+            )
+        else:
+            out = _contract_gemm_flat(
+                batch.entry_small, win.reshape(oy * ox, kh * kw),
+                kern.reshape(-1), batch.n_bits,
+            )
         return out.reshape(d, oy, ox)
     if impl == "gemm":
         kh, kw = kern.shape

@@ -298,6 +298,50 @@ def _default_characterize(
     return fn
 
 
+def _app_name(app) -> str | None:
+    return getattr(app, "name", app) if app is not None else None
+
+
+def _configs_from_bits(bitstrings: list[str], n_luts: int) -> np.ndarray:
+    if not bitstrings:
+        return np.zeros((0, n_luts), np.uint8)
+    return np.stack([
+        np.frombuffer(s.encode("ascii"), np.uint8) - ord("0") for s in bitstrings
+    ]).astype(np.uint8)
+
+
+def _result_from_record(
+    rec: dict, method: str, settings: DSESettings, ref: np.ndarray,
+    spec: OperatorSpec, t0: float,
+) -> DSEResult:
+    """Rehydrate a cached front record into a DSEResult (request-cache hit)."""
+    return DSEResult(
+        method=method,
+        settings=settings,
+        ppf_configs=_configs_from_bits(rec["ppf_configs"], spec.n_luts),
+        ppf_objs_est=np.asarray(rec["ppf_objs"], np.float64).reshape(-1, 2),
+        vpf_configs=_configs_from_bits(rec["configs"], spec.n_luts),
+        vpf_objs=np.asarray(rec["objs"], np.float64).reshape(-1, 2),
+        hv_ppf=float(rec["hv_ppf"]),
+        hv_vpf=float(rec["hv"]),
+        n_evals=int(rec["n_evals"]),
+        wall_s=time.perf_counter() - t0,
+        hv_history=[],
+        ref_point=ref,
+        timings={"store": time.perf_counter() - t0},
+    )
+
+
+def _store_front(store, spec, app_name, st: DSESettings, method: str,
+                 res: DSEResult, request: str | None) -> None:
+    store.put_front(
+        spec, app_name, st.const_sf, st.seed, method,
+        res.vpf_configs, res.vpf_objs, res.hv_vpf,
+        ppf_configs=res.ppf_configs, ppf_objs=res.ppf_objs_est,
+        hv_ppf=res.hv_ppf, n_evals=res.n_evals, request=request,
+    )
+
+
 def _surrogate_eval_viol_jax(
     estimators: dict[str, AutoMLRegressor],
     settings: DSESettings,
@@ -324,6 +368,7 @@ def run_dse(
     ref: np.ndarray | None = None,
     app=None,
     telemetry=None,
+    store=None,
 ) -> DSEResult:
     """One full DSE run (one method, one const_sf).
 
@@ -338,6 +383,15 @@ def run_dse(
     the sink can be exported (``settings.context.tel.to_chrome_trace(path)``).
     Per-stage wall clock lands in ``DSEResult.timings`` regardless of
     telemetry state.
+
+    ``store`` (a :class:`repro.service.OperatorStore`) activates the persistent
+    operator library: already-characterized configs skip the fastchar dispatch
+    during validation, a repeated identical request returns its cached front
+    without searching, and the GA warm-starts from the library's nearest
+    cached fronts.  Only honored when ``characterize_fn`` is not caller-
+    supplied (the library is content-addressed by ``(spec, app)``; an opaque
+    objective would poison it).  With an empty library every path is
+    bit-identical to ``store=None``.
     """
     settings = settings or DSESettings()
     if telemetry is not None:
@@ -352,6 +406,20 @@ def run_dse(
         raise ValueError(f"unknown method {method!r}")
 
     t0 = time.perf_counter()
+    app_name = _app_name(app)
+    store_active = store is not None and characterize_fn is None
+    req_key = None
+    if store_active:
+        from ..service.store import request_key, train_fingerprint
+
+        req_key = request_key(
+            spec, app_name, settings.const_sf, settings.seed, method,
+            settings, train_fingerprint(train_ds),
+        )
+        rec = store.lookup_result(req_key)
+        if rec is not None:
+            ref = hv_reference(train_ds, settings) if ref is None else ref
+            return _result_from_record(rec, method, settings, ref, spec, t0)
     timings: dict[str, float] = {}
     with tel.span("dse.run", method=method, backend=ctx.backend,
                   const_sf=settings.const_sf):
@@ -372,6 +440,10 @@ def run_dse(
                     seed=settings.seed,
                 )
             characterize_fn = characterize_fn or _default_characterize(spec, settings)
+            if store_active:
+                characterize_fn = store.cached_characterize(
+                    spec, characterize_fn, app_name
+                )
             ref = hv_reference(train_ds, settings) if ref is None else ref
             max_behav, max_ppa = _constraint_bounds(train_ds, settings)
 
@@ -411,6 +483,19 @@ def run_dse(
                 ppf_c, ppf_o = _ppf_from_archive(pool, objs_est, viol)
             else:
                 init = map_pool if method == "map+ga" else None
+                if store_active:
+                    warm = store.warm_pool(
+                        spec, app_name, settings.const_sf,
+                        limit=settings.pop_size,
+                    )
+                    if warm is not None and len(warm):
+                        init = (
+                            warm
+                            if init is None or not len(init)
+                            else np.concatenate(
+                                [np.asarray(init), warm]
+                            )[: settings.pop_size]
+                        )
                 ga: GAResult
                 if ctx.resolved_ga_backend == "jax":
                     from .fastchar import surrogate_objs_device  # lazy JAX import
@@ -461,7 +546,7 @@ def run_dse(
                 spec, ppf_c, settings, ref, characterize_fn, max_behav, max_ppa
             )
         timings["validate"] = time.perf_counter() - ts
-    return DSEResult(
+    result = DSEResult(
         method=method,
         settings=settings,
         ppf_configs=ppf_c,
@@ -476,6 +561,9 @@ def run_dse(
         ref_point=ref,
         timings=timings,
     )
+    if store_active:
+        _store_front(store, spec, app_name, settings, method, result, req_key)
+    return result
 
 
 def run_dse_sweep(
@@ -488,6 +576,7 @@ def run_dse_sweep(
     estimators: dict[str, AutoMLRegressor] | None = None,
     characterize_fn: Callable[[np.ndarray], np.ndarray] | None = None,
     app=None,
+    store=None,
 ) -> list[DSEResult]:
     """A (seeds x const_sf) restart/constraint grid as ONE batched GA dispatch.
 
@@ -501,6 +590,14 @@ def run_dse_sweep(
     ``"lanes"`` axis, the lane batch is split over the context's device mesh
     (bit-identical per-lane results; host-concat combine).  Lane order:
     ``for const_sf in const_sf_grid: for seed in seeds``.
+
+    ``store`` (a :class:`repro.service.OperatorStore`) activates the persistent
+    operator library for the whole sweep: lanes whose exact request was served
+    before are answered from the cache and dropped from the device dispatch,
+    the remaining lanes warm-start from the library's nearest fronts, and
+    validation dedups already-characterized configs.  Same caveats as
+    :func:`run_dse`: caller-supplied ``characterize_fn`` disables it, and an
+    empty library is bit-identical to ``store=None``.
     """
     from .fastchar import surrogate_objs_device  # lazy JAX import
     from .fastmoo import CompiledNSGA2
@@ -513,6 +610,13 @@ def run_dse_sweep(
     if method not in ("ga", "map+ga"):
         raise ValueError(f"unsupported sweep method {method!r}")
     t0 = time.perf_counter()
+    app_name = _app_name(app)
+    store_active = store is not None and characterize_fn is None
+    fingerprint = None
+    if store_active:
+        from ..service.store import train_fingerprint
+
+        fingerprint = train_fingerprint(train_ds)
     const_sf_grid = (
         (settings.const_sf,) if const_sf_grid is None else tuple(const_sf_grid)
     )
@@ -538,13 +642,19 @@ def run_dse_sweep(
             characterize_fn = characterize_fn or _default_characterize(
                 spec, settings
             )
+            if store_active:
+                characterize_fn = store.cached_characterize(
+                    spec, characterize_fn, app_name
+                )
             ref = hv_reference(train_ds, settings)
         shared["characterize"] = time.perf_counter() - ts
 
         lane_settings: list[DSESettings] = []
         bounds: list[tuple[float, float]] = []
-        pools: list[np.ndarray | None] = []
+        pools: list = []
         lane_seeds: list[int] = []
+        cached: list[dict | None] = []   # per-lane request-cache hit
+        req_keys: list[str | None] = []
         ts = time.perf_counter()
         with tel.span("dse.map") if method == "map+ga" else tel.span("dse.lanes"):
             for sf in const_sf_grid:
@@ -555,36 +665,80 @@ def run_dse_sweep(
                     if method == "map+ga"
                     else None
                 )
+                warm = (
+                    store.warm_pool(spec, app_name, sf, limit=settings.pop_size)
+                    if store_active
+                    else None
+                )
                 for seed in seeds:
                     lane_settings.append(
                         dataclasses.replace(st_sf, seed=int(seed))
                     )
                     bounds.append((mb, mp))
-                    pools.append(pool)
+                    # per-lane seed pools: MaP pool first, then the library's
+                    # warm pool (fastmoo concatenates; cold lanes see exactly
+                    # the old single-pool path)
+                    if warm is not None and len(warm):
+                        pools.append(
+                            (pool, warm) if pool is not None else warm
+                        )
+                    else:
+                        pools.append(pool)
                     lane_seeds.append(int(seed))
+                    if store_active:
+                        from ..service.store import request_key
+
+                        rk = request_key(
+                            spec, app_name, sf, int(seed), method,
+                            settings, fingerprint,
+                        )
+                        req_keys.append(rk)
+                        cached.append(store.lookup_result(rk))
+                    else:
+                        req_keys.append(None)
+                        cached.append(None)
         if method == "map+ga":
             shared["map"] = time.perf_counter() - ts
 
+        # Lanes answered by the request cache drop out of the device dispatch.
+        live = [i for i in range(len(lane_seeds)) if cached[i] is None]
+        use_pools = method == "map+ga" or any(
+            isinstance(p, tuple) or (p is not None and len(p))
+            for p in pools
+        )
         ts = time.perf_counter()
-        with tel.span("dse.ga", n_lanes=len(lane_seeds)):
-            runner = CompiledNSGA2(
-                surrogate_objs_device(
-                    estimators, settings.behav_key, settings.ppa_key
-                ),
-                n_bits=spec.n_luts,
-                pop_size=settings.pop_size,
-                n_gen=settings.n_gen,
-                hv_ref=ref,
-                ctx=ctx,
-            )
-            gas = runner.run_sweep(
-                lane_seeds, bounds, pools if method == "map+ga" else None
-            )
+        gas: list = [None] * len(lane_seeds)
+        with tel.span("dse.ga", n_lanes=len(live)):
+            if live:
+                runner = CompiledNSGA2(
+                    surrogate_objs_device(
+                        estimators, settings.behav_key, settings.ppa_key
+                    ),
+                    n_bits=spec.n_luts,
+                    pop_size=settings.pop_size,
+                    n_gen=settings.n_gen,
+                    hv_ref=ref,
+                    ctx=ctx,
+                )
+                live_gas = runner.run_sweep(
+                    [lane_seeds[i] for i in live],
+                    [bounds[i] for i in live],
+                    [pools[i] for i in live] if use_pools else None,
+                )
+                for i, ga in zip(live, live_gas):
+                    gas[i] = ga
         shared["ga"] = time.perf_counter() - ts
 
         results: list[DSEResult] = []
-        with tel.span("dse.validate", n_lanes=len(lane_seeds)):
-            for st, (mb, mp), ga in zip(lane_settings, bounds, gas):
+        with tel.span("dse.validate", n_lanes=len(live)):
+            for i, (st, (mb, mp), ga) in enumerate(
+                zip(lane_settings, bounds, gas)
+            ):
+                if ga is None:   # request-cache hit: rehydrate, no search
+                    results.append(
+                        _result_from_record(cached[i], method, st, ref, spec, t0)
+                    )
+                    continue
                 tv = time.perf_counter()
                 ppf_c, ppf_o = _ppf_from_archive(
                     ga.archive_configs, ga.archive_objs, ga.archive_viol
@@ -597,23 +751,26 @@ def run_dse_sweep(
                 # genuinely per-lane
                 timings = dict(shared)
                 timings["validate"] = time.perf_counter() - tv
-                results.append(
-                    DSEResult(
-                        method=method,
-                        settings=st,
-                        ppf_configs=ppf_c,
-                        ppf_objs_est=ppf_o,
-                        vpf_configs=vpf_c,
-                        vpf_objs=vpf_o,
-                        hv_ppf=hv_ppf,
-                        hv_vpf=hv_vpf,
-                        n_evals=len(ga.archive_configs),
-                        wall_s=time.perf_counter() - t0,
-                        hv_history=ga.hv_history,
-                        ref_point=ref,
-                        timings=timings,
-                    )
+                res = DSEResult(
+                    method=method,
+                    settings=st,
+                    ppf_configs=ppf_c,
+                    ppf_objs_est=ppf_o,
+                    vpf_configs=vpf_c,
+                    vpf_objs=vpf_o,
+                    hv_ppf=hv_ppf,
+                    hv_vpf=hv_vpf,
+                    n_evals=len(ga.archive_configs),
+                    wall_s=time.perf_counter() - t0,
+                    hv_history=ga.hv_history,
+                    ref_point=ref,
+                    timings=timings,
                 )
+                if store_active:
+                    _store_front(
+                        store, spec, app_name, st, method, res, req_keys[i]
+                    )
+                results.append(res)
     return results
 
 

@@ -584,8 +584,23 @@ class CompiledNSGA2:
     # -- host API -------------------------------------------------------------
 
     def _prep_init(
-        self, initial_population: np.ndarray | None
+        self, initial_population
     ) -> tuple[np.ndarray, int]:
+        """Seed rows for the initial population.
+
+        Accepts one (k, n_bits) array or a list/tuple of pools (e.g. a MaP
+        solution pool followed by the operator library's warm-start pool):
+        pools concatenate in order and truncate to ``pop_size``.  An empty /
+        None pool contributes nothing, so a cold start (no seeds at all)
+        keeps ``k = 0`` and the run stays bit-identical to the unseeded GA.
+        """
+        if isinstance(initial_population, (list, tuple)):
+            parts = [
+                np.asarray(p, np.uint8)
+                for p in initial_population
+                if p is not None and len(p)
+            ]
+            initial_population = np.concatenate(parts) if parts else None
         init = np.zeros((self.pop_size, self.n_bits), np.uint8)
         k = 0
         if initial_population is not None and len(initial_population):

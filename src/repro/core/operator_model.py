@@ -71,10 +71,18 @@ OPERATOR_KINDS = ("mul", "add")
 
 @dataclass(frozen=True)
 class OperatorSpec:
-    """Static description of one signed approximate-operator family."""
+    """Static description of one approximate-operator family.
 
-    n_bits: int                       # operand width N (signed)
+    ``signed=True`` (the paper's case) interprets operand codes as two's
+    complement and gives the multiplier a Booth-style negated top row;
+    ``signed=False`` keeps the same carry-chain/removable-LUT structure but
+    reads codes as plain unsigned integers -- no sign row, no wrap -- so the
+    accurate config computes the exact unsigned product/sum.
+    """
+
+    n_bits: int                       # operand width N
     op: str = "mul"                   # operator kind: "mul" | "add"
+    signed: bool = True               # two's-complement (True) or unsigned codes
     rows: int = field(init=False)     # partial-product rows (R = N/2 mul, 1 add)
     width: int = field(init=False)    # per-row adder width (N+2 mul, N+1 add)
     cols_removable: int = field(init=False)  # removable columns per row
@@ -101,23 +109,31 @@ class OperatorSpec:
 
     @property
     def n_inputs(self) -> int:
-        """Number of distinct values of one signed operand."""
+        """Number of distinct values of one operand."""
         return 1 << self.n_bits
 
     @property
     def operand_values(self) -> np.ndarray:
-        """All signed operand values in index order 0 .. 2^N-1 (two's complement)."""
+        """All operand values in code order 0 .. 2^N-1 (two's complement when
+        signed, identity when unsigned)."""
         u = np.arange(self.n_inputs, dtype=np.int64)
+        if not self.signed:
+            return u
         return np.where(u >= self.n_inputs // 2, u - self.n_inputs, u)
 
     @property
     def n_row_masks(self) -> int:
         return 1 << self.cols_removable
 
+    @property
+    def tag(self) -> str:
+        """Short stable family name, e.g. ``mul8`` / ``add6u`` (library keys)."""
+        return f"{self.op}{self.n_bits}{'' if self.signed else 'u'}"
+
 
 @functools.lru_cache(maxsize=None)
-def spec_for(n_bits: int, op: str = "mul") -> OperatorSpec:
-    return OperatorSpec(n_bits, op)
+def spec_for(n_bits: int, op: str = "mul", signed: bool = True) -> OperatorSpec:
+    return OperatorSpec(n_bits, op, signed)
 
 
 # ---------------------------------------------------------------------------
@@ -256,12 +272,14 @@ def accurate_config(spec: OperatorSpec) -> np.ndarray:
 # and combine them host-side in int64, see ``entry_row_values``).
 
 
-def _chain_eval(t1, t2, mask, w: int, cpr: int, xp, dtype):
+def _chain_eval(t1, t2, mask, w: int, cpr: int, xp, dtype, signed_out: bool = True):
     """Carry-truncated ``W``-bit add of ``t1 + t2`` under a per-column keep mask.
 
     ``t1``/``t2`` are W-bit unsigned patterns, ``mask`` the per-row integer
     keep-mask (bit ``j`` keeps column ``j``; columns ``>= cpr`` are always
-    kept).  Broadcasts over any common shape; returns the signed W-bit value.
+    kept).  Broadcasts over any common shape; returns the W-bit value, read
+    as two's complement when ``signed_out`` (the default) and as a plain
+    unsigned pattern otherwise (unsigned operator families).
     """
     t1 = t1.astype(dtype)
     t2 = t2.astype(dtype)
@@ -282,6 +300,8 @@ def _chain_eval(t1, t2, mask, w: int, cpr: int, xp, dtype):
             c_next = c_next * kept
         s = s | (sj << j)
         c = c_next
+    if not signed_out:
+        return s
     sign = 1 << (w - 1)
     return xp.where((s & sign) != 0, s - (1 << w), s)
 
@@ -300,21 +320,26 @@ def _entry_row_values(spec: OperatorSpec, masks, a_codes, b_codes, xp, dtype):
     modw = (1 << w) - 1
     a = a_codes.astype(dtype)
     b = b_codes.astype(dtype)
-    a_s = xp.where(a >= half, a - 2 * half, a)
-    b_s = xp.where(b >= half, b - 2 * half, b)
+    if spec.signed:
+        a_s = xp.where(a >= half, a - 2 * half, a)
+        b_s = xp.where(b >= half, b - 2 * half, b)
+    else:  # unsigned codes ARE the values; chain outputs read unsigned too
+        a_s, b_s = a, b
     if spec.op == "add":
         return [
-            _chain_eval(a_s & modw, b_s & modw, masks[..., 0], w, cpr, xp, dtype)
+            _chain_eval(a_s & modw, b_s & modw, masks[..., 0], w, cpr, xp,
+                        dtype, signed_out=spec.signed)
         ]
     vals = []
     for r in range(spec.rows):
-        top = r == spec.rows - 1
+        top = spec.signed and r == spec.rows - 1
         a0 = (a >> (2 * r)) & 1
         a1 = (a >> (2 * r + 1)) & 1
         t1 = xp.where(a0 == 1, b_s & modw, 0)
         bx = -b_s if top else b_s
         t2 = xp.where(a1 == 1, (bx << 1) & modw, 0)
-        vals.append(_chain_eval(t1, t2, masks[..., r], w, cpr, xp, dtype))
+        vals.append(_chain_eval(t1, t2, masks[..., r], w, cpr, xp, dtype,
+                                signed_out=spec.signed))
     return vals
 
 
@@ -366,8 +391,10 @@ def _synth_small(spec: OperatorSpec, masks, xp, dtype):
     (``R*4*B*W`` lane-ops total, vs materializing/gathering a
     ``(2, 4, B, 2^(N+1))`` HBM table).  mul only.
     """
-    if spec.op != "mul":
-        raise ValueError(f"_synth_small is mul-only, got op={spec.op!r}")
+    if spec.op != "mul" or not spec.signed:
+        raise ValueError(
+            f"_synth_small covers the signed multiplier only, got {spec.tag}"
+        )
     w, cpr = spec.width, spec.cols_removable
     n_in = spec.n_inputs
     modw = (1 << w) - 1
@@ -420,8 +447,10 @@ def product_tables(spec: OperatorSpec, configs: np.ndarray) -> np.ndarray:
       axis 2 operand B's.
     """
     configs = np.atleast_2d(np.asarray(configs))
-    if spec.op == "add":
-        masks = config_to_masks(spec, configs)            # (D, 1)
+    if spec.op == "add" or not spec.signed:
+        # adders and unsigned families synthesize entries directly (the
+        # precomputed RowTables are the signed multiplier's fast path)
+        masks = config_to_masks(spec, configs)            # (D, R)
         codes = np.arange(spec.n_inputs, dtype=np.int64)
         return entry_product(
             spec, masks[:, None, None, :], codes[:, None], codes[None, :]
@@ -464,9 +493,13 @@ def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> 
     """Bit-level simulation of one op, independent of the table machinery."""
     config = np.asarray(config).astype(np.int64)
     n, w = spec.n_bits, spec.width
-    half = 1 << (n - 1)
-    if not (-half <= a < half and -half <= b < half):
-        raise ValueError("operand out of range")
+    if spec.signed:
+        half = 1 << (n - 1)
+        if not (-half <= a < half and -half <= b < half):
+            raise ValueError("operand out of range")
+    else:
+        if not (0 <= a < (1 << n) and 0 <= b < (1 << n)):
+            raise ValueError("operand out of range")
     cpr = spec.cols_removable
     modw = (1 << w) - 1
     if spec.op == "add":
@@ -485,12 +518,12 @@ def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> 
                 c_next = 0
             s |= sj << j
             c = c_next
-        if s & (1 << (w - 1)):
+        if spec.signed and s & (1 << (w - 1)):
             s -= 1 << w
         return int(s)
     total = 0
     for r in range(spec.rows):
-        top = r == spec.rows - 1
+        top = spec.signed and r == spec.rows - 1
         a0 = (a >> (2 * r)) & 1
         a1 = (a >> (2 * r + 1)) & 1
         t1 = (b & modw) if a0 else 0
@@ -510,7 +543,7 @@ def simulate_product(spec: OperatorSpec, a: int, b: int, config: np.ndarray) -> 
                 c_next = 0
             s |= sj << j
             c = c_next
-        if s & (1 << (w - 1)):
+        if spec.signed and s & (1 << (w - 1)):
             s -= 1 << w
         total += s << (2 * r)
     return int(total)

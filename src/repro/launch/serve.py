@@ -69,7 +69,26 @@ def main(argv=None):
     ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
                     help="keep the process (and the metrics endpoint) alive "
                          "this long after serving, so a scraper can collect")
+    ap.add_argument("--dse-service", action="store_true",
+                    help="mount the persistent DSE service on the metrics "
+                         "server: POST /dse submits a (n_bits, op, signed, "
+                         "app, const_sf, seed, method) job into the batched "
+                         "queue, GET /dse?id=<job> polls its result, GET "
+                         "/dse/library reports the operator-library status; "
+                         "requires --metrics-port")
+    ap.add_argument("--dse-smoke", type=int, default=0, metavar="N",
+                    help="after serving, POST N small DSE requests to the "
+                         "live endpoint and wait for their fronts (endpoint "
+                         "self-test; implies --dse-service)")
+    ap.add_argument("--dse-pop", type=int, default=16,
+                    help="service GA population per request lane")
+    ap.add_argument("--dse-gens", type=int, default=8,
+                    help="service GA generations per request lane")
     args = ap.parse_args(argv)
+    if args.dse_smoke:
+        args.dse_service = True
+    if args.dse_service and args.metrics_port is None:
+        ap.error("--dse-service requires --metrics-port")
 
     # one sink for the whole driver: prefill/decode latency histograms and
     # tokens/sec gauges always collect (counters chain to the process
@@ -85,6 +104,39 @@ def main(argv=None):
 
         metrics = MetricsServer(tel=obs.GLOBAL, port=args.metrics_port).start()
         print(f"metrics: {metrics.url}/metrics  health: {metrics.url}/healthz")
+
+    # DSE service: job intake + result polling + library status ride the
+    # same server; the queue coalesces compatible requests into single
+    # run_dse_sweep dispatches and the operator library persists their fronts
+    dse_queue = None
+    if args.dse_service:
+        from ..core.dse import DSESettings
+        from ..service import (
+            DSEJobQueue, DSERequest, OperatorStore, default_runner,
+        )
+        from ..service.store import store_status
+
+        dse_store = OperatorStore()
+        dse_queue = DSEJobQueue(default_runner(
+            settings=DSESettings(pop_size=args.dse_pop, n_gen=args.dse_gens,
+                                 backend="jax"),
+            store=dse_store,
+        ))
+
+        def post_dse(payload: dict) -> dict:
+            job_id = dse_queue.submit(DSERequest.from_dict(payload))
+            return {"job_id": job_id, "queued": dse_queue.depth()}
+
+        def get_dse(params: dict) -> dict:
+            res = dse_queue.result(params["id"])
+            return res if res is not None else {"status": "pending"}
+
+        metrics.add_route("POST", "/dse", post_dse)
+        metrics.add_route("GET", "/dse", get_dse)
+        metrics.add_route("GET", "/dse/library",
+                          lambda params: store_status(dse_store))
+        print(f"dse service: POST {metrics.url}/dse "
+              f"(library: {dse_store.root})")
 
     cfg = get_arch(args.arch)
     if not args.full_config:
@@ -212,9 +264,43 @@ def main(argv=None):
         print(f"serve.tokens_per_s: {tel.gauges['serve.tokens_per_s']:.1f} "
               f"(last request)")
 
+    if args.dse_smoke:
+        # endpoint self-test: post a small burst through the live HTTP
+        # surface (not the queue object) and wait for every front
+        import json as _json
+        import urllib.request
+
+        t0 = time.perf_counter()
+        jobs = []
+        for i in range(args.dse_smoke):
+            body = _json.dumps({
+                "n_bits": 4, "const_sf": 0.5 + 0.3 * (i % 2), "seed": i // 2,
+            }).encode()
+            req = urllib.request.Request(
+                f"{metrics.url}/dse", data=body,
+                headers={"Content-Type": "application/json"},
+            )
+            with urllib.request.urlopen(req) as resp:
+                jobs.append(_json.loads(resp.read())["job_id"])
+        if not dse_queue.join(timeout=600):
+            raise RuntimeError("dse smoke: jobs did not finish in 600s")
+        for jid in jobs:
+            with urllib.request.urlopen(f"{metrics.url}/dse?id={jid}") as resp:
+                res = _json.loads(resp.read())
+            if res["status"] != "done":
+                raise RuntimeError(f"dse smoke: {jid} -> {res}")
+            print(f"dse {jid}: const_sf={res['request']['const_sf']} "
+                  f"seed={res['request']['seed']} hv={res['hv_vpf']:.4g} "
+                  f"front={len(res['front'])}")
+        print(f"dse smoke: {args.dse_smoke} requests -> "
+              f"{obs.GLOBAL.counter('service.batches')} batched dispatch(es) "
+              f"in {time.perf_counter() - t0:.1f}s")
+
     if metrics is not None and args.hold > 0:
         print(f"holding {args.hold:.0f}s for scrapers ({metrics.url}/metrics)")
         time.sleep(args.hold)
+    if dse_queue is not None:
+        dse_queue.close()
     if metrics is not None:
         metrics.stop()
     return 0

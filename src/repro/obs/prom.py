@@ -17,7 +17,10 @@ This module makes the process scrapeable while it serves:
     thread serving ``GET /metrics`` (live exposition of a telemetry --
     usually ``obs.GLOBAL``, which sees every child sink's counters) and
     ``GET /healthz`` (JSON: device liveness, tuning-cache status, optional
-    deployment descriptor).
+    deployment descriptor).  Application endpoints (the DSE service's
+    ``POST /dse`` job intake, ``GET /dse`` result polling) mount through
+    :meth:`MetricsServer.add_route`: a route fn takes the JSON body (POST)
+    or the query params (GET) as a dict and returns a JSON-able dict.
 
 Stdlib-only, like the rest of ``repro.obs``: the health probe's device check
 imports JAX lazily and degrades to ``"unavailable"`` without it.
@@ -29,6 +32,7 @@ import json
 import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qsl
 
 from . import telemetry as obs
 
@@ -177,11 +181,23 @@ class MetricsServer:
         self.port = port
         self.check_device = check_device
         self.deployment: dict | None = None
+        self.routes: dict[tuple[str, str], object] = {}
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
 
     def set_deployment(self, deployment: dict | None) -> None:
         self.deployment = deployment
+
+    def add_route(self, method: str, path: str, fn) -> None:
+        """Mount ``fn(payload: dict) -> dict`` at (method, path).
+
+        POST routes get the parsed JSON body; GET routes get the query
+        params (single values).  The return dict is sent as JSON with 200;
+        a ``ValueError``/``KeyError`` raised by the fn maps to 400, any
+        other exception to 500.  Routes can be added before or after
+        :meth:`start` -- the handler reads the table live.
+        """
+        self.routes[(method.upper(), path)] = fn
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -201,8 +217,28 @@ class MetricsServer:
                 self.end_headers()
                 self.wfile.write(body)
 
+            def _send_json(self, code: int, payload: dict) -> None:
+                body = (json.dumps(payload, indent=2) + "\n").encode()
+                self._send(code, body, "application/json")
+
+            def _route(self, method: str, path: str, payload: dict) -> bool:
+                fn = server.routes.get((method, path))
+                if fn is None:
+                    return False
+                try:
+                    self._send_json(200, fn(payload))
+                except (ValueError, KeyError, TypeError) as exc:
+                    self._send_json(
+                        400, {"error": f"{type(exc).__name__}: {exc}"}
+                    )
+                except Exception as exc:  # route bug: report, don't hang
+                    self._send_json(
+                        500, {"error": f"{type(exc).__name__}: {exc}"}
+                    )
+                return True
+
             def do_GET(self):
-                path = self.path.split("?", 1)[0]
+                path, _, query = self.path.partition("?")
                 if path == "/metrics":
                     body = render_prometheus(server.tel).encode()
                     self._send(200, body, CONTENT_TYPE)
@@ -212,9 +248,21 @@ class MetricsServer:
                         check_device=server.check_device,
                     )
                     code = 200 if payload["status"] == "ok" else 503
-                    body = (json.dumps(payload, indent=2) + "\n").encode()
-                    self._send(code, body, "application/json")
-                else:
+                    self._send_json(code, payload)
+                elif not self._route("GET", path, dict(parse_qsl(query))):
+                    self._send(404, b"not found\n", "text/plain")
+
+            def do_POST(self):
+                path = self.path.split("?", 1)[0]
+                try:
+                    n = int(self.headers.get("Content-Length") or 0)
+                    payload = json.loads(self.rfile.read(n) or b"{}")
+                    if not isinstance(payload, dict):
+                        raise ValueError("request body must be a JSON object")
+                except ValueError as exc:
+                    self._send_json(400, {"error": f"bad request body: {exc}"})
+                    return
+                if not self._route("POST", path, payload):
                     self._send(404, b"not found\n", "text/plain")
 
         self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)

@@ -79,6 +79,9 @@ QUALITY_GATES: tuple = (
     # real generations (bench_serving); top1 is the headline BEHAV gate
     (r"^serving\.axo_", "top1", "higher", 0.05),
     (r"^serving\.axo_", "match", "higher", 0.10),
+    # DSE service (bench_service): deterministic at fixed seed -- the cold
+    # sweep and its replay must reproduce the same validated hypervolume
+    (r"^service\.(cold_sweep|warm_replay)$", "hv_vpf", "higher", 0.02),
 )
 
 _METRIC_RE = re.compile(r"([A-Za-z_][\w]*)=([-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?)")

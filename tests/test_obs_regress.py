@@ -456,6 +456,19 @@ def test_alert_rules_reference_live_exposition_names():
     tel.gauge("serve.axo_top1", 1.0)
     tel.gauge("serve.axo_free_run_match", 1.0)
     tel.gauge("serve.axo_logit_rel_err", 0.0)
+    # the exact series the DSE service records (repro.service.store / .queue)
+    tel.count("service.store_hit")
+    tel.count("service.store_miss")
+    tel.count("service.store_corrupt")
+    tel.count("service.request_hit")
+    tel.count("service.request_miss")
+    tel.count("service.jobs")
+    tel.count("service.batches")
+    tel.count("service.job_errors")
+    tel.gauge("service.library_size", 1.0)
+    tel.gauge("service.front_count", 1.0)
+    tel.observe("service.queue_depth", 1.0)
+    tel.observe("service.batch_lanes", 1.0)
     exposed = {
         line.split("{", 1)[0].split(" ")[0]
         for line in render_prometheus(tel).splitlines()

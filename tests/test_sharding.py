@@ -108,6 +108,101 @@ class TestShardedAppBehav:
 
 
 # ---------------------------------------------------------------------------
+# Sharded table-free entry paths (fastchar + fastapp config axis)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedEntryPaths:
+    """The entry/entry_pallas impls ride the same config-axis shard_map as the
+    table impls: every path must be bit-identical to its unsharded dispatch."""
+
+    @pytest.fixture(scope="class")
+    def batch(self):
+        from repro.core.dataset import gen_random
+
+        spec = spec_for(8)
+        cfgs = gen_random(spec, 16, seed=4)
+        rng = np.random.default_rng(5)
+        operands = dict(
+            a2=rng.integers(0, spec.n_inputs, (7, 48)),
+            b=rng.integers(0, spec.n_inputs, (48, 5)),
+            a3=rng.integers(0, spec.n_inputs, (16, 7, 48)),
+            x=rng.integers(0, spec.n_inputs, 120),
+            h=rng.integers(0, spec.n_inputs, 9),
+            img=rng.integers(0, spec.n_inputs, (16, 16)),
+            k=rng.integers(0, spec.n_inputs, (3, 3)),
+        )
+        return spec, cfgs, operands
+
+    @pytest.mark.parametrize("n_dev", MESH_SIZES)
+    def test_fastchar_entry_sharded_bit_identical(self, batch, n_dev):
+        spec, cfgs, _ = batch
+        base = behav_metrics_jax(spec, cfgs, impl="entry")
+        sharded = behav_metrics_jax(
+            spec, cfgs, ctx=_ctx(n_dev, kernel_impl="entry")
+        )
+        for k in base:
+            np.testing.assert_array_equal(base[k], sharded[k], err_msg=k)
+
+    @pytest.mark.parametrize("n_dev", MESH_SIZES)
+    def test_fastapp_entry_matmul_and_conv_sharded(self, batch, n_dev):
+        from repro.apps.fastapp import (
+            table_batch, table_conv1d_jax, table_conv2d_jax, table_matmul_jax,
+        )
+
+        spec, cfgs, o = batch
+        base = table_batch(spec, cfgs)
+        sb = table_batch(spec, cfgs, ctx=_ctx(n_dev, kernel_impl="entry"))
+        # shared codes, per-config codes, 1-D and 2-D convs
+        np.testing.assert_array_equal(
+            np.asarray(table_matmul_jax(base, o["a2"], o["b"], impl="entry")),
+            np.asarray(table_matmul_jax(sb, o["a2"], o["b"])),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(table_matmul_jax(base, o["a3"], o["b"], impl="entry")),
+            np.asarray(table_matmul_jax(sb, o["a3"], o["b"])),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(table_conv1d_jax(base, o["x"], o["h"], impl="entry")),
+            np.asarray(table_conv1d_jax(sb, o["x"], o["h"])),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(table_conv2d_jax(base, o["img"], o["k"], impl="entry")),
+            np.asarray(table_conv2d_jax(sb, o["img"], o["k"])),
+        )
+
+    @pytest.mark.parametrize("n_dev", MESH_SIZES)
+    def test_fastapp_entry_pallas_gemv_sharded(self, batch, n_dev):
+        from repro.apps.fastapp import table_batch, table_matmul_jax
+
+        spec, cfgs, o = batch
+        base = table_batch(spec, cfgs)
+        sb = table_batch(
+            spec, cfgs, ctx=_ctx(n_dev, kernel_impl="entry_pallas")
+        )
+        np.testing.assert_array_equal(
+            np.asarray(table_matmul_jax(
+                base, o["a2"], o["b"], impl="entry_pallas", interpret=True
+            )),
+            np.asarray(table_matmul_jax(sb, o["a2"], o["b"], interpret=True)),
+        )
+
+    def test_all_apps_entry_sharded_bit_identical(self):
+        spec = spec_for(8)
+        rng = np.random.default_rng(1)
+        cfgs = rng.integers(0, 2, (16, spec.n_luts)).astype(np.uint8)
+        apps = [APPLICATIONS[n]() for n in sorted(APPLICATIONS)]
+        base = multi_app_behav_jax(apps, spec, cfgs)
+        sharded = multi_app_behav_jax(
+            apps, spec, cfgs, ctx=_ctx(N_DEV, kernel_impl="entry")
+        )
+        for name in base:
+            np.testing.assert_array_equal(
+                base[name], sharded[name], err_msg=name
+            )
+
+
+# ---------------------------------------------------------------------------
 # Lane-sharded GA sweeps (fastmoo lane axis)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,124 @@
+"""Unsigned operator variants: ``spec_for(n_bits, op=..., signed=False)``.
+
+The unsigned family drops the two's-complement operand interpretation (codes
+ARE magnitudes) and the final-row / adder sign handling; everything else --
+the per-row LUT decomposition, column-removal config space, entry synthesis
+-- is shared with the signed operators.  Exhaustive bit-match against the
+independent :func:`simulate_product` oracle at 4/6/8 bits.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import characterize, gen_random
+from repro.core.operator_model import (
+    accurate_config,
+    entry_product,
+    exact_table,
+    product_tables,
+    simulate_product,
+    spec_for,
+)
+
+
+def _config_to_masks(spec, configs):
+    from repro.core.operator_model import config_to_masks
+
+    return config_to_masks(spec, configs)
+
+
+class TestSpecFamily:
+    def test_tags(self):
+        assert spec_for(8).tag == "mul8"
+        assert spec_for(8, signed=False).tag == "mul8u"
+        assert spec_for(6, op="add", signed=False).tag == "add6u"
+
+    def test_spec_for_caches_distinct_variants(self):
+        assert spec_for(8) is spec_for(8)
+        assert spec_for(8) == spec_for(8, op="mul", signed=True)
+        assert spec_for(8) != spec_for(8, signed=False)
+
+    def test_unsigned_operand_values_are_magnitudes(self):
+        for n in (4, 6, 8):
+            u = spec_for(n, signed=False).operand_values
+            np.testing.assert_array_equal(u, np.arange(1 << n))
+
+    def test_signed_operand_values_unchanged(self):
+        v = spec_for(4).operand_values
+        assert v.min() == -8 and v.max() == 7  # two's complement regression
+
+
+@pytest.mark.parametrize("n_bits", [4, 6, 8])
+@pytest.mark.parametrize("op", ["mul", "add"])
+class TestAccurateExhaustive:
+    def test_accurate_config_is_exact(self, n_bits, op):
+        """The all-ones config must compute true unsigned a*b / a+b over the
+        ENTIRE operand grid (exhaustive at every bit width)."""
+        spec = spec_for(n_bits, op=op, signed=False)
+        tab = product_tables(spec, accurate_config(spec)[None])[0]
+        u = np.arange(1 << n_bits, dtype=np.int64)
+        want = u[:, None] * u[None, :] if op == "mul" else u[:, None] + u[None, :]
+        np.testing.assert_array_equal(tab, want)
+        np.testing.assert_array_equal(exact_table(spec), want)
+
+
+@pytest.mark.parametrize("n_bits", [4, 6, 8])
+@pytest.mark.parametrize("op", ["mul", "add"])
+def test_random_configs_match_simulate_oracle(n_bits, op):
+    """product_tables (entry-synthesis route) vs the independent bit-level
+    simulator on random approximate configs: exhaustive operand grid at 4
+    bits, dense random sampling at 6/8 bits."""
+    spec = spec_for(n_bits, op=op, signed=False)
+    rng = np.random.default_rng(n_bits)
+    cfgs = gen_random(spec, 4, seed=n_bits)
+    tabs = product_tables(spec, cfgs)
+    if n_bits == 4:
+        pairs = [(a, b) for a in range(16) for b in range(16)]
+    else:
+        n = 1 << n_bits
+        pairs = list(zip(rng.integers(0, n, 200), rng.integers(0, n, 200)))
+    for cfg, tab in zip(cfgs, tabs):
+        for a, b in pairs:
+            assert tab[a, b] == simulate_product(spec, int(a), int(b), cfg), (
+                f"{spec.tag} a={a} b={b}"
+            )
+
+
+@pytest.mark.parametrize("n_bits", [4, 6])
+def test_entry_product_matches_tables_unsigned(n_bits):
+    """The vectorized entry synthesis equals the table route element-wise."""
+    spec = spec_for(n_bits, op="mul", signed=False)
+    cfgs = gen_random(spec, 6, seed=1)
+    masks = _config_to_masks(spec, cfgs)
+    codes = np.arange(1 << n_bits)
+    vals = entry_product(
+        spec, masks[:, None, None, :], codes[None, :, None], codes[None, None, :]
+    )
+    np.testing.assert_array_equal(vals, product_tables(spec, cfgs))
+
+
+def test_unsigned_characterization_end_to_end():
+    """The numpy characterization pipeline accepts unsigned specs: finite
+    metrics, zero error on the accurate config."""
+    spec = spec_for(6, signed=False)
+    cfgs = np.concatenate([accurate_config(spec)[None], gen_random(spec, 3, seed=2)])
+    ds = characterize(spec, cfgs)
+    for name, vals in ds.metrics.items():
+        assert np.isfinite(vals).all(), name
+    for err_key in ("AVG_ABS_ERR", "MAX_ABS_ERR"):
+        if err_key in ds.metrics:
+            assert ds.metrics[err_key][0] == 0.0
+
+
+def test_signed_tables_regression_unaffected():
+    """Adding the signed flag must not move the signed 8x8 tables."""
+    spec = spec_for(8)
+    cfgs = gen_random(spec, 3, seed=3)
+    tabs = product_tables(spec, cfgs)
+    v = spec.operand_values
+    acc = product_tables(spec, accurate_config(spec)[None])[0]
+    np.testing.assert_array_equal(acc, v[:, None] * v[None, :])
+    for cfg, tab in zip(cfgs, tabs):
+        for a, b in [(0, 0), (3, 250), (128, 128), (255, 1), (77, 200)]:
+            # signed simulate_product takes operand VALUES, tables take codes
+            assert tab[a, b] == simulate_product(spec, int(v[a]), int(v[b]), cfg)
